@@ -1,0 +1,101 @@
+"""PrIM strong/weak scaling tables (paper Figs. 12-15).
+
+Strong scaling: fixed problem, 1..N banks. Weak scaling: fixed problem per
+bank.  Rows carry the paper's phase breakdown (CPU-DPU / DPU / Inter-DPU /
+DPU-CPU).  With 1 CPU device the bank axis degenerates to 1; run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (``run.py --banks 8``
+re-execs itself) for the real curves.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import prim
+from repro.core import make_bank_grid
+
+
+def _workloads(scale: int):
+    rng = np.random.default_rng(0)
+    n = 100_000 * scale
+    adj = prim.bfs.random_graph(2000 * scale, 4)
+    ip, ix, dv = prim.spmv.random_csr(1000 * scale, 512, 8)
+    vals, cols = prim.spmv.csr_to_ell(ip, ix, dv, 1000 * scale)
+    A = rng.normal(size=(256 * scale, 512)).astype(np.float32)
+    return {
+        "VA": lambda g: prim.va.pim(g, rng.integers(0, 99, n).astype(np.int32),
+                                    rng.integers(0, 99, n).astype(np.int32)),
+        "GEMV": lambda g: prim.gemv.pim(g, A, rng.normal(size=512)
+                                        .astype(np.float32)),
+        "SpMV": lambda g: prim.spmv.pim(g, vals, cols, rng.normal(size=512)
+                                        .astype(np.float32)),
+        "SEL": lambda g: prim.sel.pim(g, rng.integers(0, 99, n)
+                                      .astype(np.int32)),
+        "UNI": lambda g: prim.uni.pim(g, np.sort(rng.integers(0, 99, n))
+                                      .astype(np.int32)),
+        "BS": lambda g: prim.bs.pim(
+            g, np.sort(rng.integers(0, 1 << 20, 1 << 16)).astype(np.int32),
+            rng.integers(0, 1 << 20, 4096 * scale).astype(np.int32)),
+        "TS": lambda g: prim.ts.pim(g, rng.normal(size=8192 * scale)
+                                    .astype(np.float32),
+                                    rng.normal(size=64).astype(np.float32)),
+        "BFS": lambda g: prim.bfs.pim(g, adj, 0),
+        "MLP": lambda g: prim.mlp.pim(
+            g, [rng.normal(size=(256, 512)).astype(np.float32),
+                rng.normal(size=(128, 256)).astype(np.float32)],
+            rng.normal(size=512).astype(np.float32)),
+        "NW": lambda g: prim.nw.pim(g, rng.integers(0, 4, 64 * scale)
+                                    .astype(np.int32),
+                                    rng.integers(0, 4, 64 * scale)
+                                    .astype(np.int32), block=32),
+        "HST-S": lambda g: prim.hist.pim_short(
+            g, rng.integers(0, 256, n).astype(np.int32)),
+        "HST-L": lambda g: prim.hist.pim_long(
+            g, rng.integers(0, 256, n).astype(np.int32)),
+        "RED": lambda g: prim.red.pim(g, rng.integers(0, 99, n)
+                                      .astype(np.int32)),
+        "SCAN-SSA": lambda g: prim.scan.pim_ssa(g, rng.integers(0, 9, n)
+                                                .astype(np.int32)),
+        "SCAN-RSS": lambda g: prim.scan.pim_rss(g, rng.integers(0, 9, n)
+                                                .astype(np.int32)),
+        "TRNS": lambda g: prim.trns.pim(
+            g, rng.normal(size=(512, 64 * scale)).astype(np.float32),
+            m=8, n=8),
+    }
+
+
+def strong_scaling(bank_counts=(1,)):
+    """Fig. 13/14 analogue: fixed problem, varying bank count."""
+    rows = []
+    for nb in bank_counts:
+        grid = make_bank_grid(nb)
+        for name, fn in _workloads(scale=4).items():
+            _, t = fn(grid)
+            rows.append({"table": "fig13_strong", **t.row(name, nb)})
+    return rows
+
+
+def weak_scaling(bank_counts=(1,)):
+    """Fig. 15 analogue: fixed problem *per bank*."""
+    rows = []
+    for nb in bank_counts:
+        grid = make_bank_grid(nb)
+        for name, fn in _workloads(scale=nb).items():
+            _, t = fn(grid)
+            rows.append({"table": "fig15_weak", **t.row(name, nb)})
+    return rows
+
+
+def tasklet_scaling():
+    """Fig. 12 analogue: on-bank parallelism sweep via the DPU model (the
+    tasklet axis is a DPU-hardware concept; the model reproduces the paper's
+    curves, with the measured single-bank time alongside)."""
+    from repro.core.perfmodel import DpuModel
+    m = DpuModel()
+    rows = []
+    for t in (1, 2, 4, 8, 11, 16):
+        rows.append({"table": "fig12_tasklets", "tasklets": t,
+                     "int32_add_mops": m.arith_throughput("add", "int32", t)
+                     / 1e6,
+                     "speedup_vs_1": m.arith_throughput("add", "int32", t)
+                     / m.arith_throughput("add", "int32", 1)})
+    return rows

@@ -1,0 +1,116 @@
+"""Roofline table renderer + perf-iteration driver.
+
+Reads the dry-run JSON records (written by ``repro.launch.dryrun``) and
+prints the §Roofline table: three terms in seconds, dominant bound,
+MODEL_FLOPS/HLO_FLOPs, roofline fraction — one row per (arch × shape),
+single-pod mesh.
+
+``--cell arch:shape [--opt flags]`` re-runs one cell through a dry-run
+subprocess with optimization flags for the §Perf hillclimb, and prints the
+before/after delta of the dominant term.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+DRYRUN_DIR = os.path.join(HERE, "..", "experiments", "dryrun")
+
+
+def load_records(mesh: str = "16x16", directory: str | None = None):
+    recs = {}
+    for f in sorted(glob.glob(os.path.join(directory or DRYRUN_DIR,
+                                           "*.json"))):
+        base = os.path.basename(f)
+        if base.startswith("opt-"):
+            continue
+        d = json.load(open(f))
+        if d.get("mesh", mesh) == mesh or d.get("status", "").startswith("SKIP"):
+            recs[(d["arch"], d["shape"])] = d
+    return recs
+
+
+def render_table(recs) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'status':10s} {'bound':10s} "
+           f"{'t_comp(s)':>10s} {'t_mem(s)':>10s} {'t_coll(s)':>10s} "
+           f"{'useful':>7s} {'roofl%':>7s} {'HBM_ok':>6s}")
+    lines = [hdr, "-" * len(hdr)]
+    for (arch, shape), d in sorted(recs.items()):
+        if d.get("status", "OK") != "OK":
+            lines.append(f"{arch:24s} {shape:12s} {d['status']:10s}")
+            continue
+        r = d["roofline"]
+        lines.append(
+            f"{arch:24s} {shape:12s} {'OK':10s} {r['bound']:10s} "
+            f"{r['t_compute_s']:10.4f} {r['t_memory_s']:10.4f} "
+            f"{r['t_collective_s']:10.4f} {r['useful_flop_frac']:7.3f} "
+            f"{100*r['roofline_frac']:6.1f}% "
+            f"{'Y' if d.get('hbm_ok') else 'N':>6s}")
+    return "\n".join(lines)
+
+
+def rows(recs):
+    out = []
+    for (arch, shape), d in sorted(recs.items()):
+        row = {"table": "roofline", "arch": arch, "shape": shape,
+               "status": d.get("status", "OK")}
+        if d.get("status") == "OK":
+            row.update(d["roofline"])
+            row["hbm_ok"] = d.get("hbm_ok")
+        out.append(row)
+    return out
+
+
+def run_cell_subprocess(arch: str, shape: str, opt: str = "",
+                        mesh: str = "single") -> dict:
+    repo = os.path.join(HERE, "..")
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh]
+    if opt:
+        cmd += ["--opt", opt]
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       cwd=repo, timeout=4000)
+    if r.returncode != 0:
+        raise RuntimeError(r.stderr[-4000:])
+    tag = f"opt-{'-'.join(opt.split(','))}_" if opt else ""
+    mesh_name = "16x16" if mesh == "single" else "2x16x16"
+    fname = f"{tag}{arch}_{shape}_{mesh_name}.json"
+    # arch ids in filenames use the config's display name
+    cands = glob.glob(os.path.join(DRYRUN_DIR, f"{tag}*{shape}_{mesh_name}.json"))
+    cands = [c for c in cands if arch.replace("_", "-").split("-")[0]
+             in os.path.basename(c)]
+    with open(sorted(cands, key=os.path.getmtime)[-1]) as f:
+        return json.load(f)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--cell", default=None, help="arch:shape to re-run")
+    ap.add_argument("--opt", default="", help="comma-joined opt flags")
+    args = ap.parse_args()
+
+    if args.cell:
+        arch, shape = args.cell.split(":")
+        base = run_cell_subprocess(arch, shape)
+        new = run_cell_subprocess(arch, shape, opt=args.opt)
+        rb, rn = base["roofline"], new["roofline"]
+        print(f"cell {arch}:{shape}  opt=[{args.opt}]")
+        for k in ("t_compute_s", "t_memory_s", "t_collective_s"):
+            print(f"  {k}: {rb[k]:.4f} -> {rn[k]:.4f} "
+                  f"({100*(rn[k]-rb[k])/max(rb[k],1e-12):+.1f}%)")
+        print(f"  bound: {rb['bound']} -> {rn['bound']}")
+        return
+
+    recs = load_records(args.mesh)
+    print(render_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Benchmark driver — one table per paper figure. Prints CSV rows.
+
+Suites:
+  micro    figs 4-10 (microbenchmark characterization, model vs measured)
+  prim     figs 12-15 (PrIM strong/weak scaling with phase breakdown)
+  compare  figs 16-17 (CPU measured vs PIM/TPU modeled)
+  roofline S-Roofline table from dry-run records (if present)
+
+``--banks N`` re-execs under N forced host devices so the scaling tables
+sweep a real bank axis (kept out of the default path: benches see the true
+device count unless explicitly asked).
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import io
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+
+def emit(rows) -> None:
+    if not rows:
+        return
+    by_table: dict = {}
+    for r in rows:
+        by_table.setdefault(r.get("table", "misc"), []).append(r)
+    for table, trs in by_table.items():
+        keys = list(trs[0].keys())
+        buf = io.StringIO()
+        w = csv.DictWriter(buf, fieldnames=keys, extrasaction="ignore")
+        w.writeheader()
+        for r in trs:
+            w.writerow(r)
+        print(f"# --- {table} ---")
+        print(buf.getvalue().rstrip())
+        print()
+
+
+def suite_micro(fast: bool = True):
+    from benchmarks import microbench as mb
+    rows = []
+    rows += mb.fig4_arith_throughput(fast=fast)
+    rows += mb.fig5_wram_stream()
+    rows += mb.fig6_mram_latency()
+    rows += mb.fig7_mram_stream()
+    rows += mb.fig8_strided_random()
+    rows += mb.fig9_roofline()
+    rows += mb.fig10_transfers()
+    return rows
+
+
+def suite_prim():
+    from benchmarks import prim_scaling as ps
+    import jax
+    counts = sorted({1, min(2, jax.device_count()), jax.device_count()})
+    rows = []
+    rows += ps.tasklet_scaling()
+    rows += ps.strong_scaling(bank_counts=counts)
+    rows += ps.weak_scaling(bank_counts=counts)
+    return rows
+
+
+def suite_compare():
+    from benchmarks import system_compare as sc
+    return sc.compare() + sc.energy()
+
+
+def suite_roofline():
+    from benchmarks import roofline as rl
+    recs = rl.load_records()
+    return rl.rows(recs) if recs else []
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="all",
+                    choices=["all", "micro", "prim", "compare", "roofline"])
+    ap.add_argument("--banks", type=int, default=0,
+                    help="re-exec with N forced host devices")
+    ap.add_argument("--full", action="store_true",
+                    help="full tasklet sweep in fig4")
+    args = ap.parse_args()
+
+    if args.banks:
+        env = dict(os.environ,
+                   XLA_FLAGS=f"--xla_force_host_platform_device_count="
+                             f"{args.banks}")
+        cmd = [sys.executable, "-m", "benchmarks.run", "--suite", args.suite]
+        if args.full:
+            cmd.append("--full")
+        raise SystemExit(subprocess.call(cmd, env=env))
+
+    rows = []
+    if args.suite in ("all", "micro"):
+        rows += suite_micro(fast=not args.full)
+    if args.suite in ("all", "prim"):
+        rows += suite_prim()
+    if args.suite in ("all", "compare"):
+        rows += suite_compare()
+    if args.suite in ("all", "roofline"):
+        rows += suite_roofline()
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

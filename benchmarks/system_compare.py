@@ -1,0 +1,135 @@
+"""System comparison (paper Figs. 16-17 analogue): measured CPU backend vs
+the modeled 2,556-DPU PIM system vs the modeled 256-chip TPU v5e slice.
+
+Per PrIM workload we (1) measure the single-device CPU time of the ref
+implementation, (2) predict the PIM system time from the DpuSystemModel
+(pipeline vs MRAM roofline + host transfer, using each workload's
+instruction/byte mix from Table 2), and (3) predict TPU time from the v5e
+roofline.  The paper's published PIM-vs-CPU speedups are carried alongside
+to validate the trend reproduction.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import prim
+from repro.core.perfmodel import DpuSystemModel, TpuModel
+
+SYS = DpuSystemModel()
+TPU = TpuModel()
+
+# (instructions/elem on DPU, MRAM bytes/elem, inter-DPU bytes/elem,
+#  paper speedup of 2556-DPU vs CPU from Fig. 16 [approx], flops/elem,
+#  hbm bytes/elem on TPU, DPU load-imbalance factor, host-union bytes/elem,
+#  host sync rounds).  The last three encode the paper's §5.2 pathologies:
+#  SpMV = float-mul + irregular-row imbalance; BFS = per-level frontier
+#  union over all DPUs on the host; NW = one host round-trip per diagonal.
+WORKLOADS = {
+    "VA":       (6, 12, 0.0, 57.5, 1, 12, 1, 0, 0),
+    "GEMV":     (38, 8, 0.0, 86.6, 2, 8, 1, 0, 0),
+    "SpMV":     (180, 12, 0.0, 0.4, 2, 12, 8, 0, 0),
+    "SEL":      (8, 16, 0.1, 342.5, 2, 16, 1, 0, 0),
+    "UNI":      (9, 16, 0.1, 629.5, 2, 16, 1, 0, 0),
+    "BS":       (20, 8, 0.0, 59.8, 5, 8, 1, 0, 0),
+    "TS":       (70, 4, 0.0, 17.5, 8, 4, 1, 0, 0),
+    "BFS":      (25, 16, 8.0, 0.06, 4, 16, 4, SYS.n_dpus * 20 / 8, 20),
+    "MLP":      (38, 8, 0.5, 5.8, 2, 8, 1, 0, 0),
+    "NW":       (40, 16, 8.0, 0.08, 6, 16, 2, 0, 4000),
+    "HST-S":    (10, 4, 0.0, 111.8, 2, 4, 1, 0, 0),
+    "HST-L":    (15, 4, 0.0, 111.8, 2, 4, 1, 0, 0),
+    "RED":      (7, 8, 0.0, 121.5, 1, 8, 1, 0, 0),
+    "SCAN-SSA": (12, 32, 0.1, 31.0, 2, 32, 1, 0, 0),
+    "SCAN-RSS": (11, 24, 0.1, 31.0, 2, 24, 1, 0, 0),
+    "TRNS":     (15, 16, 0.0, 136.3, 1, 16, 1, 0, 0),
+}
+
+HOST_MEM_BW = 20e9        # host-side merge bandwidth (union/merge loops)
+SYNC_LATENCY = 0.25e-3    # one host round-trip (launch + retrieve)
+
+
+def _pim_time(n_elems: int, instr: float, mram_b: float, inter_b: float,
+              imbalance: float = 1.0, host_b: float = 0.0,
+              sync_rounds: int = 0) -> float:
+    fill = 1.0     # ≥11 tasklets assumed (paper PR-4)
+    t_pipe = instr * n_elems * imbalance / (SYS.dpu.freq_hz * SYS.n_dpus) \
+        / fill
+    t_mram = mram_b * n_elems / SYS.aggregate_mram_bw
+    t_inter = SYS.transfer_time(inter_b * n_elems, "parallel_from") if \
+        inter_b else 0.0
+    t_host = host_b * n_elems / HOST_MEM_BW + sync_rounds * SYNC_LATENCY
+    return max(t_pipe, t_mram) + t_inter + t_host
+
+
+def _tpu_time(n_elems: int, flops: float, hbm_b: float) -> float:
+    chips = 256
+    return max(flops * n_elems / (chips * TPU.peak_flops_bf16),
+               hbm_b * n_elems / (chips * TPU.hbm_bw))
+
+
+def _cpu_measured(name: str, n: int) -> float:
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 100, n).astype(np.int32)
+    t0 = time.perf_counter()
+    if name == "VA":
+        _ = x + x
+    elif name in ("RED",):
+        _ = x.sum()
+    elif name in ("SCAN-SSA", "SCAN-RSS"):
+        _ = np.cumsum(x)
+    elif name in ("HST-S", "HST-L"):
+        _ = np.bincount(x % 256, minlength=256)
+    elif name == "SEL":
+        _ = x[x % 2 != 0]
+    elif name == "UNI":
+        _ = x[np.concatenate([[True], x[1:] != x[:-1]])]
+    elif name == "BS":
+        _ = np.searchsorted(np.sort(x[: 1 << 14]), x[: n // 8])
+    elif name == "TRNS":
+        m = x[: (n // 512) * 512].reshape(-1, 512)
+        _ = np.ascontiguousarray(m.T)
+    else:   # matmul-ish / graph kernels: use a GEMV proxy of matched flops
+        a = rng.normal(size=(n // 512, 512)).astype(np.float32)
+        v = rng.normal(size=512).astype(np.float32)
+        _ = a @ v
+    return time.perf_counter() - t0
+
+
+def compare(n_elems: int = 4_000_000):
+    rows = []
+    for name, (instr, mram_b, inter_b, paper_speedup, flops, hbm_b,
+               imbalance, host_b, sync_rounds) in WORKLOADS.items():
+        t_cpu = _cpu_measured(name, n_elems)
+        t_pim = _pim_time(n_elems, instr, mram_b, inter_b, imbalance,
+                          host_b, sync_rounds)
+        t_tpu = _tpu_time(n_elems, flops, hbm_b)
+        rows.append({
+            "table": "fig16", "benchmark": name,
+            "cpu_measured_ms": t_cpu * 1e3,
+            "pim2556_model_ms": t_pim * 1e3,
+            "tpu256_model_ms": t_tpu * 1e3,
+            "model_speedup_vs_cpu": t_cpu / t_pim,
+            "paper_speedup_vs_cpu": paper_speedup,
+        })
+    # the paper's qualitative finding: SpMV/BFS/NW are the PIM-unfriendly
+    # three — reproduced as a *ranking* (bottom-3 of the modeled speedups)
+    worst_model = {r["benchmark"] for r in
+                   sorted(rows, key=lambda r: r["model_speedup_vs_cpu"])[:3]}
+    for r in rows:
+        r["paper_bottom3_match"] = worst_model == {"SpMV", "BFS", "NW"}
+    return rows
+
+
+def energy(n_elems: int = 4_000_000):
+    """Fig. 17 analogue: energy = power × time with Table 4 TDPs."""
+    rows = []
+    tdp = {"cpu": 73.0, "pim640": 96.0, "pim2556": 383.0, "tpu256": 256 * 170}
+    for r in compare(n_elems):
+        rows.append({
+            "table": "fig17", "benchmark": r["benchmark"],
+            "cpu_mJ": r["cpu_measured_ms"] * tdp["cpu"],
+            "pim2556_model_mJ": r["pim2556_model_ms"] * tdp["pim2556"],
+            "tpu256_model_mJ": r["tpu256_model_ms"] * tdp["tpu256"],
+        })
+    return rows

@@ -1,0 +1,47 @@
+"""Serve a small model with batched requests: prefill (teacher-forced) +
+greedy decode against sharded KV caches, using the same serve path the
+dry-run lowers at 512 devices.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch import serve as serve_mod
+from repro.models import transformer
+from repro.runtime import carve_mesh
+
+
+def main():
+    cfg = dataclasses.replace(get_config("tinyllama-1.1b", smoke=True),
+                              n_layers=4, d_model=256, n_heads=8,
+                              n_kv_heads=4, d_ff=512, fast_decode=True)
+    mesh = carve_mesh(jax.devices(), model_parallel=1)
+    params, specs = transformer.init(jax.random.PRNGKey(0), cfg)
+
+    B, prompt_len, max_new = 4, 12, 20
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, prompt_len),
+                                0, cfg.vocab)
+    t0 = time.perf_counter()
+    out = serve_mod.greedy_generate(params, cfg, mesh, specs, prompt,
+                                    max_new=max_new)
+    dt = time.perf_counter() - t0
+    print(f"batch={B} prompt={prompt_len} new={max_new} "
+          f"({B*max_new/dt:.1f} tok/s incl. compile)")
+    for b in range(B):
+        print(f"  req{b}: {list(map(int, out[b]))}")
+    assert (out[:, :prompt_len] == prompt).all()
+    print("prompt preserved; generation OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro — PIM-style banked-execution training/serving framework in JAX.
+
+Reproduction + TPU-native production extension of the UPMEM/PrIM paper
+(Gómez-Luna et al., 2021). See DESIGN.md / EXPERIMENTS.md at the repo root.
+"""

@@ -1,0 +1,2 @@
+from .store import Checkpointer
+__all__ = ["Checkpointer"]

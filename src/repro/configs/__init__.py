@@ -1,0 +1,6 @@
+"""Assigned-architecture configs (``--arch <id>``) + shape registry."""
+from .registry import (ARCHS, ARCH_IDS, SHAPES, Shape, get_config,
+                       input_specs, is_subquadratic, skip_reason)
+
+__all__ = ["ARCHS", "ARCH_IDS", "SHAPES", "Shape", "get_config",
+           "input_specs", "is_subquadratic", "skip_reason"]

@@ -1,0 +1,199 @@
+"""Compiled-HLO introspection: collective-byte accounting + cost extraction.
+
+``cost_analysis()`` gives HLO FLOPs and bytes, but not collective traffic.
+We parse ``compiled.as_text()`` (the SPMD-partitioned, optimized module) and
+sum operand sizes of every collective op, per the roofline prescription:
+
+    collective-ops = all-gather | all-reduce | reduce-scatter | all-to-all
+                     | collective-permute
+
+Returned sizes are per-device operand bytes (the partitioned module is the
+single-program-multiple-device view).  A per-kind breakdown and an estimated
+"wire bytes" figure (ring-algorithm traffic per device) are also produced for
+perf-iteration commentary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "f4e2m1fn": 1,
+}
+
+# bf16[8,128]{1,0} or f32[] or s32[3]
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+# one HLO instruction: "%name = TYPE op-name(OPERANDS), attrs..."
+# NB: optimized-HLO text elides operand types, so bytes are derived from the
+# RESULT type: all-reduce/all-to-all/collective-permute results equal their
+# operands; all-gather operands are result/group; reduce-scatter are result×group.
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(([^\)]*)\)(.*)$")
+
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of one HLO shape string like ``bf16[8,128]{1,0}``."""
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    dtype, dims = m.groups()
+    if dtype == "token":
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    operand_bytes: float = 0.0           # prescribed roofline metric
+    wire_bytes: float = 0.0              # ring-algorithm per-device traffic
+    by_kind: dict = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+    def add(self, kind: str, nbytes: int, group_size: int) -> None:
+        self.count += 1
+        self.operand_bytes += nbytes
+        g = max(group_size, 1)
+        frac = (g - 1) / g if g > 1 else 0.0
+        mult = {"all-reduce": 2.0 * frac, "all-gather": frac,
+                "reduce-scatter": frac, "all-to-all": frac,
+                "collective-permute": 1.0}[kind]
+        self.wire_bytes += nbytes * mult
+        d = self.by_kind.setdefault(kind, {"bytes": 0.0, "count": 0})
+        d["bytes"] += nbytes
+        d["count"] += 1
+
+
+def _group_size(attrs: str) -> int:
+    m = _GROUPS_IOTA_RE.search(attrs)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return 0
+
+
+def _result_bytes(result: str, is_start: bool) -> int:
+    """Bytes of a result type; tuple results of async -start ops use the
+    last element (the output buffer, not the aliased operand)."""
+    if result.startswith("("):
+        shapes = _SHAPE_RE.findall(result)
+        if not shapes:
+            return 0
+        sizes = []
+        for dtype, dims in shapes:
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            sizes.append(n * _DTYPE_BYTES.get(dtype, 4))
+        return sizes[-1] if is_start else sum(sizes)
+    return shape_bytes(result)
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Parse optimized HLO text and account every collective op's operands."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if not any(k in line for k in _COLLECTIVE_KINDS):
+            continue
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        result, kind, suffix, _operands, attrs = m.groups()
+        if suffix == "-done":   # async pair: count only the -start
+            continue
+        g = _group_size(attrs)
+        out_bytes = _result_bytes(result, suffix == "-start")
+        if kind == "all-gather":
+            nbytes = out_bytes // max(g, 1)
+        elif kind == "reduce-scatter":
+            nbytes = out_bytes * max(g, 1)
+        else:
+            nbytes = out_bytes
+        stats.add(kind, nbytes, g)
+    return stats
+
+
+def collective_bytes(hlo_text: str) -> float:
+    return collective_stats(hlo_text).operand_bytes
+
+
+def cost_summary(compiled) -> dict:
+    """Extract flops / bytes from ``compiled.cost_analysis()`` (dict or list)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+def memory_summary(compiled) -> dict:
+    ms = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        out[k] = getattr(ms, k, 0)
+    out["total_per_device"] = (out["argument_size_in_bytes"]
+                               + out["output_size_in_bytes"]
+                               + out["temp_size_in_bytes"]
+                               - out["alias_size_in_bytes"])
+    return out
+
+
+def remat_duplication(hlo_text: str, marker: str = "dot(") -> float:
+    """Rough remat-waste probe: ratio of dot ops in the whole module to dot
+    ops in the forward entry (duplicate op names indicate recompute)."""
+    dots = hlo_text.count(marker)
+    return float(dots)
+
+
+def count_ops(hlo_text: str, names: Iterable[str]) -> dict:
+    return {n: len(re.findall(rf"\b{re.escape(n)}\b", hlo_text)) for n in names}
+
+
+_OPCODE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"([a-z][a-z0-9-]*)(?:\.[0-9]+)?\(")
+
+
+def bytes_by_opcode(hlo_text: str, top: int = 15) -> list[tuple[str, float, int]]:
+    """Per-opcode sum of result bytes — the §Perf byte-hog finder.
+    Returns [(opcode, total_result_bytes, count)] sorted desc."""
+    agg: dict = {}
+    for line in hlo_text.splitlines():
+        m = _OPCODE_RE.search(line)
+        if not m:
+            continue
+        result, opcode = m.groups()
+        nb = _result_bytes(result, False)
+        d = agg.setdefault(opcode, [0.0, 0])
+        d[0] += nb
+        d[1] += 1
+    rows = sorted(((k, v[0], v[1]) for k, v in agg.items()),
+                  key=lambda r: -r[1])
+    return rows[:top]

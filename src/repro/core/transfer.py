@@ -1,0 +1,113 @@
+"""Host <-> bank transfer engine (paper §2.1 / §3.4).
+
+Reproduces the three CPU↔DPU transfer modes of the UPMEM SDK:
+
+* serial     — ``dpu_copy_to``: one bank at a time; latency grows linearly
+               with bank count (paper Fig. 10b, flat bandwidth).
+* parallel   — ``dpu_prepare_xfer``/``dpu_push_xfer``: all banks at once;
+               requires equal-size buffers per bank (same SDK restriction).
+* broadcast  — ``dpu_broadcast_to``: one buffer replicated to every bank.
+
+Plus the "transposition library": main memory uses a flat row-major layout
+while PIM-enabled memory needs bank-major chunks; :func:`to_banked` /
+:func:`from_banked` perform that relayout (pad + reshape to (banks, chunk)).
+
+Every call returns (result, TransferRecord) so benchmarks can account
+CPU-DPU / DPU-CPU time the way the paper's stacked bars do.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .banked import BankGrid
+
+
+@dataclasses.dataclass
+class TransferRecord:
+    kind: str
+    nbytes: int
+    seconds: float
+
+    @property
+    def bandwidth(self) -> float:
+        return self.nbytes / self.seconds if self.seconds else float("inf")
+
+
+def _nbytes(x) -> int:
+    return int(np.prod(x.shape)) * x.dtype.itemsize if hasattr(x, "shape") else 0
+
+
+# -- layout conversion ("transposition library") ----------------------------
+
+def to_banked(x: np.ndarray, n_banks: int, axis: int = 0):
+    """Pad ``axis`` to a multiple of n_banks and reshape to bank-major:
+    (..., d, ...) -> (banks, ..., d/banks, ...). Returns (array, orig_len)."""
+    x = np.asarray(x)
+    d = x.shape[axis]
+    pad = (-d) % n_banks
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = np.pad(x, widths)
+    new_shape = (x.shape[:axis] + (n_banks, x.shape[axis] // n_banks)
+                 + x.shape[axis + 1:])
+    moved = np.moveaxis(x.reshape(new_shape), axis, 0)
+    return moved, d
+
+
+def from_banked(x: np.ndarray, orig_len: int, axis: int = 0) -> np.ndarray:
+    """Inverse of :func:`to_banked`."""
+    x = np.asarray(x)
+    x = np.moveaxis(x, 0, axis)
+    flat = x.reshape(x.shape[:axis] + (-1,) + x.shape[axis + 2:])
+    sl = [slice(None)] * flat.ndim
+    sl[axis] = slice(0, orig_len)
+    return flat[tuple(sl)]
+
+
+# -- transfer modes ----------------------------------------------------------
+
+def push_parallel(grid: BankGrid, x, spec: P | None = None):
+    t0 = time.perf_counter()
+    out = grid.to_banks(x, spec)
+    jax.block_until_ready(out)
+    return out, TransferRecord("cpu_dpu_parallel", _nbytes(np.asarray(x)),
+                               time.perf_counter() - t0)
+
+
+def push_serial(grid: BankGrid, chunks: Sequence[np.ndarray]):
+    t0 = time.perf_counter()
+    out = grid.serial_to_banks(chunks)
+    jax.block_until_ready(out)
+    nbytes = sum(_nbytes(c) for c in chunks)
+    return out, TransferRecord("cpu_dpu_serial", nbytes,
+                               time.perf_counter() - t0)
+
+
+def push_broadcast(grid: BankGrid, x):
+    t0 = time.perf_counter()
+    out = grid.broadcast(x)
+    jax.block_until_ready(out)
+    return out, TransferRecord("cpu_dpu_broadcast", _nbytes(np.asarray(x)),
+                               time.perf_counter() - t0)
+
+
+def pull_parallel(grid: BankGrid, x):
+    t0 = time.perf_counter()
+    host = grid.from_banks(x)
+    return host, TransferRecord("dpu_cpu_parallel", _nbytes(host),
+                                time.perf_counter() - t0)
+
+
+def pull_serial(grid: BankGrid, xs: Sequence):
+    t0 = time.perf_counter()
+    host = [np.asarray(jax.device_get(x)) for x in xs]
+    nbytes = sum(_nbytes(h) for h in host)
+    return host, TransferRecord("dpu_cpu_serial", nbytes,
+                                time.perf_counter() - t0)

@@ -1,0 +1,2 @@
+from .pipeline import DataConfig, Loader, make_batch
+__all__ = ["DataConfig", "Loader", "make_batch"]

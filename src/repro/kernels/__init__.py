@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Layout per the repo convention: one ``<name>.py`` per kernel
+(``pl.pallas_call`` + explicit ``BlockSpec`` VMEM tiling), ``ops.py`` with the
+jit'd public wrappers (padding, dtype policy, interpret switch), and
+``ref.py`` with the pure-jnp oracles used by tests and non-kernel backends.
+
+Paper hot spots covered: GEMV/MLP (PrIM §4.2/4.9), RED (§4.12), SCAN (§4.13),
+HST (§4.11), SpMV (§4.3); LM hot spots: flash attention (GQA/causal/SWA),
+grouped MoE matmul, chunked selective-SSM scan (SSD).
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

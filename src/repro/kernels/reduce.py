@@ -1,0 +1,49 @@
+"""Reduction Pallas kernel (PrIM §4.12 RED).
+
+The PrIM version does per-tasklet local sums then a tree merge; on TPU the
+grid is sequential, so the "tree" collapses into a carried VMEM accumulator —
+the final block writes the scalar.  Mirrors the paper's finding that the
+single-accumulator variant beats tree variants when merge cost dominates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _reduce_kernel(x_ref, o_ref, acc_ref, *, nb):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[0, 0] += jnp.sum(x_ref[...].astype(acc_ref.dtype))
+
+    @pl.when(i == nb - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def reduce_sum(x, *, block: int = 4096, interpret: bool = False):
+    """Sum of a 1-D array; len(x) % block == 0 (ops.py pads)."""
+    (n,) = x.shape
+    assert n % block == 0
+    nb = n // block
+    acc_dtype = jnp.float32 if jnp.issubdtype(x.dtype, jnp.floating) else x.dtype
+    out = pl.pallas_call(
+        functools.partial(_reduce_kernel, nb=nb),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), x.dtype),
+        scratch_shapes=[pltpu.VMEM((1, 1), acc_dtype)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(x.reshape(1, n))
+    return out[0, 0]

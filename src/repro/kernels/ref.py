@@ -1,0 +1,175 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are validated against
+(tests sweep shapes/dtypes and assert_allclose kernel vs oracle).  They are
+also used directly by the model stack when running on backends where the
+kernel path is disabled.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# -- attention ---------------------------------------------------------------
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              scale: float | None = None, bias=None):
+    """Multi-head attention oracle with GQA + causal + sliding-window.
+
+    q: (B, H, S, D); k, v: (B, KVH, T, D); KVH divides H.
+    window: sliding-window size (attend to keys in (i-window, i]).
+    """
+    B, H, S, D = q.shape
+    KVH = k.shape[1]
+    group = H // KVH
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) * scale
+    T = k.shape[2]
+    qpos = jnp.arange(S)[:, None] + (T - S)    # align last q with last k
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    if bias is not None:
+        logits = logits + bias
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)        # fully-masked rows
+    return jnp.einsum("bhst,bhtd->bhsd", p, vr.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, window: int | None = None,
+                     scale: float | None = None):
+    """Single-token decode oracle. q: (B, H, 1, D); caches: (B, KVH, T, D);
+    lengths: (B,) valid cache lengths."""
+    B, H, _, D = q.shape
+    KVH = k_cache.shape[1]
+    group = H // KVH
+    T = k_cache.shape[2]
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    kr = jnp.repeat(k_cache, group, axis=1)
+    vr = jnp.repeat(v_cache, group, axis=1)
+    logits = jnp.einsum("bhqd,bhtd->bhqt", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) * scale
+    pos = jnp.arange(T)[None, None, None, :]
+    valid = pos < lengths[:, None, None, None]
+    if window is not None:
+        valid &= pos >= (lengths[:, None, None, None] - window)
+    logits = jnp.where(valid, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqt,bhtd->bhqd", p, vr.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def decode_attention_grouped(q, k_cache, v_cache, lengths, *,
+                             window: int | None = None,
+                             scale: float | None = None):
+    """Beyond-paper optimized decode (§Perf ``fast_decode``): grouped-GQA
+    einsum — the KV cache is never repeated across the query-head group and
+    never copied to f32 (f32 accumulation via preferred_element_type), so
+    HBM traffic per step approaches the cache's own footprint."""
+    B, H, _, D = q.shape
+    KVH, T = k_cache.shape[1], k_cache.shape[2]
+    group = H // KVH
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qg = q.reshape(B, KVH, group, D)
+    logits = jnp.einsum("bkgd,bktd->bkgt", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(T)[None, None, None, :]
+    valid = pos < lengths[:, None, None, None]
+    if window is not None:
+        valid &= pos >= (lengths[:, None, None, None] - window)
+    logits = jnp.where(valid, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,bktd->bkgd", p.astype(q.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, 1, D).astype(q.dtype)
+
+
+# -- GEMV (PrIM §4.2) ---------------------------------------------------------
+
+def gemv(a, x):
+    """y = A @ x ;  A:(m,n), x:(n,)"""
+    return (a.astype(jnp.float32) @ x.astype(jnp.float32)).astype(a.dtype)
+
+
+# -- reduction (PrIM §4.12) ----------------------------------------------------
+
+def reduce_sum(x):
+    return jnp.sum(x.astype(jnp.float32) if jnp.issubdtype(x.dtype, jnp.floating)
+                   else x)
+
+
+# -- prefix sum (PrIM §4.13) ----------------------------------------------------
+
+def scan_exclusive(x):
+    c = jnp.cumsum(x, axis=-1)
+    return jnp.concatenate([jnp.zeros_like(c[..., :1]), c[..., :-1]], axis=-1)
+
+
+def scan_inclusive(x):
+    return jnp.cumsum(x, axis=-1)
+
+
+# -- histogram (PrIM §4.11) ------------------------------------------------------
+
+def histogram(values, nbins: int):
+    return jnp.zeros(nbins, jnp.int32).at[jnp.clip(values, 0, nbins - 1)].add(1)
+
+
+# -- SpMV, ELL format (PrIM §4.3, TPU-native layout) ---------------------------
+
+def spmv_ell(vals, cols, x):
+    """vals/cols: (rows, k) padded ELL (cols==-1 ⇒ padding); x: (n,)"""
+    gathered = jnp.where(cols >= 0, x[jnp.clip(cols, 0)], 0.0)
+    return jnp.sum(vals * gathered, axis=1)
+
+
+# -- grouped (MoE expert) matmul ------------------------------------------------
+
+def moe_gmm(xg, w, counts):
+    """xg: (E, C, d) tokens grouped per expert (capacity C, zero-padded);
+    w: (E, d, f); counts: (E,) valid rows. Rows beyond counts are zeroed."""
+    y = jnp.einsum("ecd,edf->ecf", xg.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    mask = jnp.arange(xg.shape[1])[None, :, None] < counts[:, None, None]
+    return jnp.where(mask, y, 0.0).astype(xg.dtype)
+
+
+# -- selective-SSM chunked scan (SSD / Mamba-2 form) ----------------------------
+
+def ssd_scan(x, a, b, c, h0=None):
+    """Sequential oracle for the SSD recurrence.
+
+    x: (B, S, H, P)   head inputs
+    a: (B, S, H)      per-head decay in (0,1]
+    b: (B, S, N)      input projection (shared across heads)
+    c: (B, S, N)      output projection
+    returns y: (B, S, H, P), h_final: (B, H, N, P)
+
+      h_t = a_t * h_{t-1} + b_t ⊗ x_t ;  y_t = c_t · h_t
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    xf, af, bf, cf = (t.astype(jnp.float32) for t in (x, a, b, c))
+    h_init = jnp.zeros((B, H, N, P), jnp.float32) if h0 is None \
+        else h0.astype(jnp.float32)
+
+    def step(h, t):
+        xt, at, bt, ct = t
+        h = at[:, :, None, None] * h + jnp.einsum("bn,bhp->bhnp", bt, xt)
+        y = jnp.einsum("bn,bhnp->bhp", ct, h)
+        return h, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(af, 1, 0),
+          jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    h_fin, ys = jax.lax.scan(step, h_init, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_fin

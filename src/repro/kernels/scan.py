@@ -1,0 +1,54 @@
+"""Prefix-sum Pallas kernel (PrIM §4.13 SCAN-RSS, on-chip form).
+
+The paper's Reduce-Scan-Scan decomposes the array into per-DPU chunks: local
+reduce → host scans the per-chunk totals → local scan + offset.  On TPU the
+sequential grid makes the middle step a carried scalar: each block writes
+``carry + cumsum(block)`` and bumps the carry by the block total — a single
+pass instead of the paper's 3·N+1 accesses (recorded as a beyond-paper win in
+EXPERIMENTS.md §Perf for the SCAN benchmark).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, o_ref, carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    x = x_ref[...].astype(carry_ref.dtype)         # (1, block)
+    local = jnp.cumsum(x, axis=-1)
+    o_ref[...] = (carry_ref[0, 0] + local).astype(o_ref.dtype)
+    carry_ref[0, 0] += jnp.sum(x)
+
+
+def scan_inclusive(x, *, block: int = 4096, interpret: bool = False):
+    """Inclusive prefix sum of a 1-D array; len(x) % block == 0 (ops.py pads)."""
+    (n,) = x.shape
+    assert n % block == 0
+    nb = n // block
+    acc_dtype = jnp.float32 if jnp.issubdtype(x.dtype, jnp.floating) else x.dtype
+    out = pl.pallas_call(
+        _scan_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((1, 1), acc_dtype)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(x.reshape(1, n))
+    return out[0]
+
+
+def scan_exclusive(x, **kw):
+    return scan_inclusive(x, **kw) - x

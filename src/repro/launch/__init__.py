@@ -1,0 +1,3 @@
+"""Launchers: production mesh, train/serve steps, multi-pod dry-run."""
+from .mesh import make_production_mesh
+__all__ = ["make_production_mesh"]

@@ -1,0 +1,5 @@
+"""Model stack: composable pure-JAX decoder (attention/MoE/Mamba/xLSTM/VLM)."""
+from . import attention, mamba, moe, transformer, xlstm
+from .layers import ModelConfig
+
+__all__ = ["ModelConfig", "attention", "mamba", "moe", "transformer", "xlstm"]

@@ -1,0 +1,107 @@
+"""GQA attention layer: train/prefill (flash kernel) + cached decode.
+
+Sharding: head-dim-fused projections sharded over "model" on the fused
+H·hd axis (works for every assigned arch incl. musicgen's 24 heads, since
+H·hd is always 128·k-divisible); KV caches are sharded by the serve layout
+chosen in launch/serve.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops, ref as kref
+from .layers import ModelConfig, dense_init, emb_axis, rope
+
+
+def init(key, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.hd
+    H, KVH = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    e = emb_axis(cfg.fsdp)
+    params = {
+        "wq": dense_init(ks[0], (d, H * hd), cfg.dtype),
+        "wk": dense_init(ks[1], (d, KVH * hd), cfg.dtype),
+        "wv": dense_init(ks[2], (d, KVH * hd), cfg.dtype),
+        "wo": dense_init(ks[3], (H * hd, d), cfg.dtype),
+    }
+    specs = {"wq": P(e, "model"), "wk": P(e, "model"),
+             "wv": P(e, "model"), "wo": P("model", e)}
+    if cfg.qkv_bias:
+        params |= {"bq": jnp.zeros((H * hd,), cfg.dtype),
+                   "bk": jnp.zeros((KVH * hd,), cfg.dtype),
+                   "bv": jnp.zeros((KVH * hd,), cfg.dtype)}
+        specs |= {"bq": P("model"), "bk": P("model"), "bv": P("model")}
+    return params, specs
+
+
+def _project(p, cfg: ModelConfig, x, positions):
+    B, S, _ = x.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"] + (p["bq"] if "bq" in p else 0)
+    k = x @ p["wk"] + (p["bk"] if "bk" in p else 0)
+    v = x @ p["wv"] + (p["bv"] if "bv" in p else 0)
+    q = q.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, KVH, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, KVH, hd).transpose(0, 2, 1, 3)
+    q = rope(q, positions[:, None, :], cfg.rope_theta)
+    k = rope(k, positions[:, None, :], cfg.rope_theta)
+    return q, k, v
+
+
+def apply(p, cfg: ModelConfig, x, *, positions=None, use_kernel=False):
+    """Training / prefill self-attention. x: (B, S, d)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project(p, cfg, x, positions)
+    attn = ops.attention if use_kernel else kref.attention
+    o = attn(q, k, v, causal=True, window=cfg.window)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.hd)
+    return o @ p["wo"]
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    shape = (batch, cfg.n_kv_heads, max_len, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def decode(p, cfg: ModelConfig, x, cache):
+    """Single-token decode. x: (B, 1, d); returns (y, new_cache)."""
+    B = x.shape[0]
+    positions = cache["len"][:, None]
+    q, k, v = _project(p, cfg, x, positions)
+    # write new kv at position len (same len for all batch in our server)
+    idx = cache["len"][0]
+    kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, 0, idx, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, 0, idx, 0))
+    lengths = cache["len"] + 1
+    o = ops.decode_attention(q, kc, vc, lengths, window=cfg.window,
+                             impl="grouped" if cfg.fast_decode else "ref")
+    o = o.transpose(0, 2, 1, 3).reshape(B, 1, cfg.n_heads * cfg.hd)
+    return o @ p["wo"], {"k": kc, "v": vc, "len": lengths}
+
+
+# -- cross attention (VLM image layers) --------------------------------------
+
+def init_cross(key, cfg: ModelConfig):
+    params, specs = init(key, cfg)
+    return params, specs
+
+
+def apply_cross(p, cfg: ModelConfig, x, kv_tokens):
+    """x: (B, S, d) text; kv_tokens: (B, T, d) frontend embeddings."""
+    B, S, _ = x.shape
+    T = kv_tokens.shape[1]
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = (kv_tokens @ p["wk"]).reshape(B, T, KVH, hd).transpose(0, 2, 1, 3)
+    v = (kv_tokens @ p["wv"]).reshape(B, T, KVH, hd).transpose(0, 2, 1, 3)
+    o = kref.attention(q, k, v, causal=False)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    return o @ p["wo"]

@@ -1,0 +1,114 @@
+"""Mamba block (SSD / Mamba-2 formulation) for the hybrid (jamba) and as the
+TPU-native selective-SSM (DESIGN.md §2: elementwise recurrence → chunked
+matmul form for the MXU).
+
+Structure: in_proj (d → 2·di: x|z) → causal depthwise conv on x → per-head
+decay a = exp(−Δ·exp(A_log)), Δ = softplus(x·dt + b) → SSD scan (Pallas
+kernel or oracle) → gate y·silu(z) → RMSNorm → out_proj.
+Decode keeps (conv window, SSM state) as the cache — O(1) per token, which is
+what makes jamba/xlstm `long_500k`-runnable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops, ref as kref
+from .layers import ModelConfig, dense_init, emb_axis, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.ssm_expand * cfg.d_model
+    H = di // cfg.ssm_head_dim
+    return di, H, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di, H, Pd, N = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    e = emb_axis(cfg.fsdp)
+    params = {
+        "in_proj": dense_init(ks[0], (d, 2 * di), cfg.dtype),
+        "conv": dense_init(ks[1], (cfg.ssm_conv, di), cfg.dtype),
+        "bc_proj": dense_init(ks[2], (di, 2 * N), cfg.dtype),
+        "dt_proj": dense_init(ks[3], (di, H), cfg.dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "a_log": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.ones((di,), cfg.dtype),
+        "out_proj": dense_init(ks[5], (di, d), cfg.dtype),
+    }
+    specs = {
+        "in_proj": P(e, "model"), "conv": P(None, "model"),
+        "bc_proj": P("model", None), "dt_proj": P("model", None),
+        "dt_bias": P(None), "a_log": P(None), "norm": P("model"),
+        "out_proj": P("model", e),
+    }
+    return params, specs
+
+
+def _conv_causal(x, w):
+    """x: (B, S, di); w: (K, di) depthwise causal conv."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssm_inputs(p, cfg, xc):
+    B, S, di = xc.shape
+    _, H, Pd, N = _dims(cfg)
+    bc = xc @ p["bc_proj"]
+    b, c = jnp.split(bc, 2, axis=-1)                        # (B,S,N) each
+    dt = jax.nn.softplus(xc.astype(jnp.float32) @ p["dt_proj"]
+                         .astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = jnp.exp(-dt * jnp.exp(p["a_log"]))                  # decay in (0,1)
+    xh = xc.reshape(B, S, H, Pd)
+    u = xh * dt[..., None].astype(xh.dtype)                 # Δ-scaled input
+    return u, a, b, c, xh
+
+
+def apply(p, cfg: ModelConfig, x, *, use_kernel=False):
+    """x: (B, S, d) → (B, S, d)."""
+    B, S, d = x.shape
+    di, H, Pd, N = _dims(cfg)
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc = _conv_causal(xi, p["conv"])
+    u, a, b, c, _ = _ssm_inputs(p, cfg, xc)
+    scan = ops.ssd_scan if use_kernel else kref.ssd_scan
+    y, _ = scan(u, a, b, c)                                 # (B,S,H,Pd)
+    y = y.reshape(B, S, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p["norm"])
+    return y @ p["out_proj"]
+
+
+def init_cache(cfg: ModelConfig, batch: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    di, H, Pd, N = _dims(cfg)
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+            "ssm": jnp.zeros((batch, H, N, Pd), jnp.float32)}
+
+
+def decode(p, cfg: ModelConfig, x, cache):
+    """x: (B, 1, d); O(1) state update."""
+    B = x.shape[0]
+    di, H, Pd, N = _dims(cfg)
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                       # (B,1,di)
+    window = jnp.concatenate([cache["conv"], xi], axis=1)   # (B,K,di)
+    w = p["conv"]
+    xc = sum(window[:, i:i + 1, :] * w[i] for i in range(w.shape[0]))
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    u, a, b, c, _ = _ssm_inputs(p, cfg, xc)                 # S=1
+    h = cache["ssm"]
+    h = a[:, 0, :, None, None] * h + jnp.einsum(
+        "bn,bhp->bhnp", b[:, 0].astype(jnp.float32),
+        u[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bn,bhnp->bhp", c[:, 0].astype(jnp.float32), h)
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p["norm"])
+    return y @ p["out_proj"], {"conv": window[:, 1:], "ssm": h}

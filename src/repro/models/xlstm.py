@@ -1,0 +1,258 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallel form) and
+sLSTM (scalar memory, recurrent form).
+
+Per the xlstm-125m spec (d_ff = 0) blocks carry their own up/down
+projections; sLSTM appears every ``cfg.slstm_every``-th layer.
+
+mLSTM parallel form (train/prefill):
+  F_t = Σ_{τ≤t} logσ(f_τ);  D[t,s] = exp(F_t − F_s + i_s − m_t), s ≤ t
+  y_t = Σ_s D[t,s] (q_t·k_s) v_s / max(|Σ_s D (q·k)|, exp(−m_t))
+Decode keeps (C: matrix memory, n, m) per head — O(1)/token, which is what
+makes xlstm `long_500k`-runnable.
+
+sLSTM: stabilized exponential-gating scalar recurrence via lax.scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .layers import ModelConfig, dense_init, emb_axis, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    return H, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    H, hd = _dims(cfg)
+    ks = jax.random.split(key, 7)
+    e = emb_axis(cfg.fsdp)
+    params = {
+        "wq": dense_init(ks[0], (d, d), cfg.dtype),
+        "wk": dense_init(ks[1], (d, d), cfg.dtype),
+        "wv": dense_init(ks[2], (d, d), cfg.dtype),
+        "wi": dense_init(ks[3], (d, H), cfg.dtype),   # input gate logits
+        "wf": dense_init(ks[4], (d, H), cfg.dtype),   # forget gate logits
+        "wz": dense_init(ks[5], (d, d), cfg.dtype),   # output gate branch
+        "wo": dense_init(ks[6], (d, d), cfg.dtype),
+        "norm": jnp.ones((d,), cfg.dtype),
+    }
+    specs = {"wq": P(e, "model"), "wk": P(e, "model"), "wv": P(e, "model"),
+             "wi": P(e, None), "wf": P(e, None), "wz": P(e, "model"),
+             "wo": P("model", e), "norm": P(None)}
+    return params, specs
+
+
+def _mlstm_heads(p, cfg, x):
+    B, S, d = x.shape
+    H, hd = _dims(cfg)
+    q = (x @ p["wq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3) / np.sqrt(hd)
+    k = (x @ p["wk"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    i = (x @ p["wi"]).astype(jnp.float32).transpose(0, 2, 1)      # (B,H,S)
+    f = (x @ p["wf"]).astype(jnp.float32).transpose(0, 2, 1)
+    return q, k, v, i, f
+
+
+def apply_mlstm(p, cfg: ModelConfig, x):
+    B, S, d = x.shape
+    H, hd = _dims(cfg)
+    q, k, v, i, f = _mlstm_heads(p, cfg, x)
+    logf = jax.nn.log_sigmoid(f)                                  # (B,H,S)
+    F = jnp.cumsum(logf, axis=-1)
+    # D̃[t,s] = F_t − F_s + i_s  (s ≤ t)
+    dmat = F[..., :, None] - F[..., None, :] + i[..., None, :]
+    tril = jnp.tril(jnp.ones((S, S), bool))
+    dmat = jnp.where(tril, dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=-1, keepdims=True)                     # (B,H,S,1)
+    dexp = jnp.exp(dmat - m)                                      # stabilized
+    qk = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                    k.astype(jnp.float32))
+    w = qk * dexp
+    norm = jnp.maximum(jnp.abs(w.sum(-1, keepdims=True)), jnp.exp(-m))
+    y = jnp.einsum("bhst,bhtd->bhsd", w / norm, v.astype(jnp.float32))
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, d).astype(x.dtype)
+    z = jax.nn.silu((x @ p["wz"]).astype(jnp.float32)).astype(x.dtype)
+    return rms_norm(y * z, p["norm"]) @ p["wo"]
+
+
+def apply_mlstm_chunked(p, cfg: ModelConfig, x, chunk: int = 256):
+    """§Perf ``chunked_mlstm``: O(S·L) mLSTM prefill instead of O(S²).
+
+    Within-chunk work uses the parallel form; cross-chunk state (C, n, m)
+    flows through a stabilized *associative scan* over chunk summaries
+    (log-depth, no while loop ⇒ exact cost accounting).  Matches
+    ``apply_mlstm`` to fp tolerance (tested)."""
+    B, S, d = x.shape
+    H, hd = _dims(cfg)
+    L = min(chunk, S)
+    assert S % L == 0
+    nc = S // L
+    q, k, v, i, f = _mlstm_heads(p, cfg, x)
+    qf, kf, vf = (t.astype(jnp.float32).reshape(B, H, nc, L, hd)
+                  for t in (q, k, v))
+    i = i.reshape(B, H, nc, L)
+    logf = jax.nn.log_sigmoid(f).reshape(B, H, nc, L)
+
+    floc = jnp.cumsum(logf, axis=-1)                       # (B,H,nc,L)
+    fsum = floc[..., -1:]                                  # (B,H,nc,1)
+    # chunk summaries: state contribution of each chunk in isolation
+    w_state = fsum - floc + i                              # (B,H,nc,L)
+    m_seg = jnp.max(w_state, axis=-1)                      # (B,H,nc)
+    wexp = jnp.exp(w_state - m_seg[..., None])
+    c_seg = jnp.einsum("bhcl,bhcld,bhcle->bhcde", wexp, kf, vf)
+    n_seg = jnp.einsum("bhcl,bhcld->bhcd", wexp, kf)
+
+    # associative combine over the chunk axis (A then B)
+    def combine(a, b):
+        fa, ma, ca, na = a
+        fb, mb, cb, nb = b
+        m = jnp.maximum(ma + fb, mb)
+        sa = jnp.exp(ma + fb - m)[..., None, None]
+        sb = jnp.exp(mb - m)[..., None, None]
+        return (fa + fb, m, sa * ca + sb * cb,
+                sa[..., 0] * na + sb[..., 0] * nb)
+
+    elems = (jnp.moveaxis(fsum[..., 0], 2, 0), jnp.moveaxis(m_seg, 2, 0),
+             jnp.moveaxis(c_seg, 2, 0), jnp.moveaxis(n_seg, 2, 0))
+    inc = jax.lax.associative_scan(combine, elems, axis=0)
+    # exclusive: state BEFORE each chunk (identity at chunk 0)
+    def excl(arr, ident):
+        return jnp.concatenate([jnp.full_like(arr[:1], ident), arr[:-1]], 0)
+    m_in = jnp.moveaxis(excl(inc[1], -1e30), 0, 2)         # (B,H,nc)
+    c_in = jnp.moveaxis(excl(inc[2], 0.0), 0, 2)           # (B,H,nc,hd,hd)
+    n_in = jnp.moveaxis(excl(inc[3], 0.0), 0, 2)           # (B,H,nc,hd)
+
+    # within-chunk parallel outputs + carry-in contribution
+    dmat = floc[..., :, None] - floc[..., None, :] + i[..., None, :]
+    tril = jnp.tril(jnp.ones((L, L), bool))
+    dmat = jnp.where(tril, dmat, -jnp.inf)
+    m_loc = jnp.max(dmat, axis=-1)                          # (B,H,nc,L)
+    carry_w = floc + m_in[..., None]                        # (B,H,nc,L)
+    m_t = jnp.maximum(m_loc, carry_w)
+    dexp = jnp.exp(dmat - m_t[..., None])
+    qk = jnp.einsum("bhcld,bhcsd->bhcls", qf, kf)
+    wgt = qk * dexp                                         # (B,H,nc,L,L)
+    carry_s = jnp.exp(carry_w - m_t)                        # (B,H,nc,L)
+    num = jnp.einsum("bhcls,bhcse->bhcle", wgt, vf) + \
+        carry_s[..., None] * jnp.einsum("bhcld,bhcde->bhcle", qf, c_in)
+    den = wgt.sum(-1) + carry_s * jnp.einsum("bhcld,bhcd->bhcl", qf, n_in)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+    y = h.reshape(B, H, S, hd).transpose(0, 2, 1, 3).reshape(B, S, d) \
+        .astype(x.dtype)
+    z = jax.nn.silu((x @ p["wz"]).astype(jnp.float32)).astype(x.dtype)
+    return rms_norm(y * z, p["norm"]) @ p["wo"]
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int):
+    H, hd = _dims(cfg)
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32)}
+
+
+def decode_mlstm(p, cfg: ModelConfig, x, cache):
+    B = x.shape[0]
+    H, hd = _dims(cfg)
+    q, k, v, i, f = _mlstm_heads(p, cfg, x)                  # S = 1
+    q, k, v = (t[:, :, 0].astype(jnp.float32) for t in (q, k, v))
+    i, f = i[..., 0], f[..., 0]                              # (B,H)
+    logf = jax.nn.log_sigmoid(f)
+    m_new = jnp.maximum(logf + cache["m"], i)
+    fg = jnp.exp(logf + cache["m"] - m_new)[..., None]
+    ig = jnp.exp(i - m_new)[..., None]
+    C = fg[..., None] * cache["C"] + ig[..., None] * \
+        jnp.einsum("bhd,bhe->bhde", k, v)
+    n = fg * cache["n"] + ig * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)),
+                      jnp.exp(-m_new))[..., None]
+    y = (num / den).reshape(B, 1, cfg.d_model).astype(x.dtype)
+    z = jax.nn.silu((x @ p["wz"]).astype(jnp.float32)).astype(x.dtype)
+    out = rms_norm(y * z, p["norm"]) @ p["wo"]
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    e = emb_axis(cfg.fsdp)
+    params = {
+        "wz": dense_init(ks[0], (d, d), cfg.dtype),
+        "wi": dense_init(ks[1], (d, d), cfg.dtype),
+        "wf": dense_init(ks[2], (d, d), cfg.dtype),
+        "wo_gate": dense_init(ks[3], (d, d), cfg.dtype),
+        "up": dense_init(ks[4], (d, 2 * d), cfg.dtype),
+        "down": dense_init(ks[5], (d, d), cfg.dtype),
+        "norm": jnp.ones((d,), cfg.dtype),
+    }
+    specs = {"wz": P(e, None), "wi": P(e, None), "wf": P(e, None),
+             "wo_gate": P(e, None), "up": P(e, "model"),
+             "down": P(None, e), "norm": P(None)}
+    return params, specs
+
+
+def _slstm_step(carry, gates):
+    c, n, m = carry
+    z, i, f, o = gates
+    logf = jax.nn.log_sigmoid(f)
+    m_new = jnp.maximum(logf + m, i)
+    fg = jnp.exp(logf + m - m_new)
+    ig = jnp.exp(i - m_new)
+    c = fg * c + ig * jnp.tanh(z)
+    n = fg * n + ig
+    h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1e-6)
+    return (c, n, m_new), h
+
+
+def _slstm_gates(p, x):
+    z = (x @ p["wz"]).astype(jnp.float32)
+    i = (x @ p["wi"]).astype(jnp.float32)
+    f = (x @ p["wf"]).astype(jnp.float32)
+    o = (x @ p["wo_gate"]).astype(jnp.float32)
+    return z, i, f, o
+
+
+def apply_slstm(p, cfg: ModelConfig, x):
+    B, S, d = x.shape
+    z, i, f, o = _slstm_gates(p, x)
+    init = (jnp.zeros((B, d), jnp.float32), jnp.zeros((B, d), jnp.float32),
+            jnp.full((B, d), -1e30, jnp.float32))
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (z, i, f, o))
+    _, hs = jax.lax.scan(_slstm_step, init, xs)
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    h = rms_norm(h, p["norm"])
+    g, u = jnp.split(h @ p["up"], 2, axis=-1)
+    return (jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u) \
+        @ p["down"]
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), -1e30, jnp.float32)}
+
+
+def decode_slstm(p, cfg: ModelConfig, x, cache):
+    z, i, f, o = _slstm_gates(p, x[:, 0])
+    carry = (cache["c"], cache["n"], cache["m"])
+    (c, n, m), h = _slstm_step(carry, (z, i, f, o))
+    h = rms_norm(h[:, None, :].astype(x.dtype), p["norm"])
+    g, u = jnp.split(h @ p["up"], 2, axis=-1)
+    out = (jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u) @ p["down"]
+    return out, {"c": c, "n": n, "m": m}

@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, apply, init, psum_compressed, schedule, global_norm
+__all__ = ["AdamWConfig", "apply", "init", "psum_compressed", "schedule", "global_norm"]

@@ -1,0 +1,16 @@
+"""PrIM — the paper's 16-workload benchmark suite, banked-execution form.
+
+Workload → module map (paper Table 2 order):
+  VA va | GEMV gemv | SpMV spmv | SEL sel | UNI uni | BS bs | TS ts |
+  BFS bfs | MLP mlp | NW nw | HST-S/HST-L hist | RED red |
+  SCAN-SSA/SCAN-RSS scan | TRNS trns
+"""
+from . import bfs, bs, gemv, hist, mlp, nw, red, scan, sel, spmv, trns, ts, uni, va
+
+ALL = {
+    "VA": va, "GEMV": gemv, "SpMV": spmv, "SEL": sel, "UNI": uni,
+    "BS": bs, "TS": ts, "BFS": bfs, "MLP": mlp, "NW": nw,
+    "HST": hist, "RED": red, "SCAN": scan, "TRNS": trns,
+}
+
+__all__ = ["ALL"] + [m.__name__.split(".")[-1] for m in ALL.values()]

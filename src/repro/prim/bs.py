@@ -1,0 +1,60 @@
+"""PrIM BS — Binary Search (paper §4.6).
+
+Decomposition: the *sorted array is replicated* on every bank (broadcast —
+the paper notes this makes CPU→DPU cost grow with bank count); the query
+values are split across banks; each bank binary-searches its queries locally;
+positions retrieved in parallel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import PartitionSpec as P
+
+from repro.core.banked import AXIS, BankGrid
+from .common import PhaseTimer, pad_chunks, sync
+
+
+def ref(sorted_arr: np.ndarray, queries: np.ndarray) -> np.ndarray:
+    return np.searchsorted(sorted_arr, queries).astype(np.int32)
+
+
+def _binary_search(arr, q):
+    """Explicit lowerbound binary search (the paper's loop), vectorized over
+    queries via vmap — log2(n) lax.while iterations."""
+    n = arr.shape[0]
+
+    def one(qv):
+        def cond(state):
+            lo, hi = state
+            return lo < hi
+
+        def body(state):
+            lo, hi = state
+            mid = (lo + hi) // 2
+            go_right = arr[mid] < qv
+            return (jnp.where(go_right, mid + 1, lo),
+                    jnp.where(go_right, hi, mid))
+
+        lo, _ = jax.lax.while_loop(cond, body, (jnp.int32(0), jnp.int32(n)))
+        return lo
+
+    return jax.vmap(one)(q)
+
+
+def pim(grid: BankGrid, sorted_arr: np.ndarray, queries: np.ndarray):
+    t = PhaseTimer()
+    with t.phase("cpu_dpu"):
+        qc, nq = pad_chunks(queries, grid.n_banks)
+        darr = sync(grid.broadcast(np.asarray(sorted_arr)))
+        dq = sync(grid.to_banks(qc))
+
+    f = grid.bank_local(lambda arr, qb: _binary_search(arr, qb[0])[None],
+                        in_specs=(P(), P(AXIS)))
+    with t.phase("dpu"):
+        pos = sync(f(darr, dq))
+    with t.phase("dpu_cpu"):
+        host = grid.from_banks(pos).reshape(-1)[:nq].astype(np.int32)
+    return host, t.times

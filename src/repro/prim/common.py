@@ -1,0 +1,80 @@
+"""Shared machinery for the PrIM workload implementations.
+
+Every PrIM benchmark exposes:
+  * ``ref(...)``            — gold semantics (numpy/jnp, single device)
+  * ``pim(grid, ...)``      — the paper's DPU decomposition on a BankGrid:
+                              parallel CPU→DPU scatter, bank-local kernel
+                              phase(s), explicit exchange phase(s), DPU→CPU
+                              retrieve.  Returns (result, PhaseTimes).
+and mirrors the paper's §4 description of its DPU implementation.
+
+``PhaseTimes`` reproduces the paper's stacked-bar breakdown:
+CPU-DPU / DPU / Inter-DPU / DPU-CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.core.banked import BankGrid
+
+
+@dataclasses.dataclass
+class PhaseTimes:
+    cpu_dpu: float = 0.0
+    dpu: float = 0.0
+    inter_dpu: float = 0.0
+    dpu_cpu: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return self.cpu_dpu + self.dpu + self.inter_dpu + self.dpu_cpu
+
+    def row(self, name: str, n_banks: int) -> dict:
+        return {"benchmark": name, "banks": n_banks,
+                "cpu_dpu_s": self.cpu_dpu, "dpu_s": self.dpu,
+                "inter_dpu_s": self.inter_dpu, "dpu_cpu_s": self.dpu_cpu,
+                "total_s": self.total}
+
+
+class PhaseTimer:
+    """Accumulates wall time per phase with device sync at boundaries."""
+
+    def __init__(self):
+        self.times = PhaseTimes()
+
+    class _Span:
+        def __init__(self, outer, phase):
+            self.outer, self.phase = outer, phase
+
+        def __enter__(self):
+            self.t0 = time.perf_counter()
+            return self
+
+        def __exit__(self, *exc):
+            dt = time.perf_counter() - self.t0
+            setattr(self.outer.times, self.phase,
+                    getattr(self.outer.times, self.phase) + dt)
+
+    def phase(self, name: str) -> "_Span":
+        return self._Span(self, name)
+
+
+def pad_chunks(x: np.ndarray, n_banks: int, fill=0) -> tuple[np.ndarray, int]:
+    """Split leading axis into n_banks equal chunks (paper: linear chunk
+    assignment, chunk i → DPU i), padding the tail."""
+    x = np.asarray(x)
+    n = x.shape[0]
+    per = -(-n // n_banks)
+    pad = per * n_banks - n
+    if pad:
+        x = np.concatenate([x, np.full((pad,) + x.shape[1:], fill, x.dtype)])
+    return x.reshape(n_banks, per, *x.shape[1:]), n
+
+
+def sync(x):
+    jax.block_until_ready(x)
+    return x

@@ -1,0 +1,40 @@
+"""PrIM GEMV — Matrix-Vector Multiply (paper §4.2).
+
+Decomposition: consecutive matrix rows → DPU i (parallel transfer); the
+input vector is replicated on every bank (broadcast CPU→DPU); each bank
+multiply-accumulates its rows (blocked Pallas GEMV on TPU); per-bank output
+chunks retrieved and concatenated by the host.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.banked import BankGrid
+from repro.kernels import ops
+from .common import PhaseTimer, pad_chunks, sync
+
+
+def ref(a: np.ndarray, x: np.ndarray) -> np.ndarray:
+    return a @ x
+
+
+def pim(grid: BankGrid, a: np.ndarray, x: np.ndarray, use_kernel: bool = False):
+    t = PhaseTimer()
+    with t.phase("cpu_dpu"):
+        ac, m = pad_chunks(a, grid.n_banks)
+        da = sync(grid.to_banks(ac))
+        dx = sync(grid.broadcast(np.asarray(x)))
+
+    def local(ab, xb):
+        if use_kernel:
+            return ops.gemv(ab[0], xb)[None]
+        return ab @ xb
+
+    from jax.sharding import PartitionSpec as P
+    from repro.core.banked import AXIS
+    f = grid.bank_local(local, in_specs=(P(AXIS), P()))
+    with t.phase("dpu"):
+        out = sync(f(da, dx))
+    with t.phase("dpu_cpu"):
+        host = grid.from_banks(out).reshape(-1)[:m]
+    return host, t.times

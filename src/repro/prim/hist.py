@@ -1,0 +1,55 @@
+"""PrIM HST — Image Histogram, short & long variants (paper §4.11).
+
+HST-S: per-tasklet private histograms merged at a barrier → TPU-native: the
+one-hot-matmul Pallas histogram (kernels/histogram.py) where each grid block
+is a "tasklet" with a private accumulator revisit.
+HST-L: one shared mutex-guarded histogram per DPU → TPUs have no mutexes
+(DESIGN.md §2); the semantic equivalent is a single jnp scatter-add per bank
+(serialized adds, like the mutex), which we implement as bincount.
+
+Both merge per-bank histograms on the host (tiny inter-DPU phase).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.banked import BankGrid
+from repro.kernels import ops
+from .common import PhaseTimer, pad_chunks, sync
+
+
+def ref(pixels: np.ndarray, nbins: int) -> np.ndarray:
+    return np.bincount(np.clip(pixels, 0, nbins - 1),
+                       minlength=nbins).astype(np.int32)
+
+
+def _pim(grid: BankGrid, pixels: np.ndarray, nbins: int, variant: str):
+    t = PhaseTimer()
+    with t.phase("cpu_dpu"):
+        pc, n = pad_chunks(pixels, grid.n_banks, fill=-1)  # -1 ⇒ bin 0, fixed
+        pad_total = pc.size - n
+        dp = sync(grid.to_banks(pc))
+
+    def local_s(pb):
+        return ops.histogram(pb[0], nbins)[None]
+
+    def local_l(pb):
+        clipped = jnp.clip(pb[0], 0, nbins - 1)
+        return jnp.zeros(nbins, jnp.int32).at[clipped].add(1)[None]
+
+    f = grid.bank_local(local_s if variant == "short" else local_l)
+    with t.phase("dpu"):
+        parts = sync(f(dp))
+    with t.phase("inter_dpu"):
+        hist = grid.from_banks(parts).sum(axis=0).astype(np.int32)
+        hist[0] -= pad_total          # remove padding sentinel counts
+    return hist, t.times
+
+
+def pim_short(grid: BankGrid, pixels: np.ndarray, nbins: int = 256):
+    return _pim(grid, pixels, nbins, "short")
+
+
+def pim_long(grid: BankGrid, pixels: np.ndarray, nbins: int = 256):
+    return _pim(grid, pixels, nbins, "long")

@@ -1,0 +1,42 @@
+"""PrIM MLP — Multilayer Perceptron inference (paper §4.9).
+
+Each layer is the GEMV decomposition (§4.2): weight rows split across banks,
+input vector broadcast.  Faithful to the paper, the host gathers the layer
+output, reconstructs the full vector, and re-broadcasts it as the next
+layer's input — that per-layer host round-trip is the "Inter-DPU" cost that
+Fig. 13 shows shrinking with parallel transfers.  ReLU after every layer.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import PartitionSpec as P
+
+from repro.core.banked import AXIS, BankGrid
+from .common import PhaseTimer, pad_chunks, sync
+
+
+def ref(weights: list[np.ndarray], x: np.ndarray) -> np.ndarray:
+    h = x
+    for w in weights:
+        h = np.maximum(w @ h, 0)
+    return h
+
+
+def pim(grid: BankGrid, weights: list[np.ndarray], x: np.ndarray):
+    t = PhaseTimer()
+    f = grid.bank_local(
+        lambda wb, hb: jnp.maximum(wb @ hb, 0),
+        in_specs=(P(AXIS), P()))
+    h = np.asarray(x)
+    for li, w in enumerate(weights):
+        with t.phase("inter_dpu" if li else "cpu_dpu"):
+            wc, m = pad_chunks(w, grid.n_banks)
+            dw = sync(grid.to_banks(wc))           # weight distribution
+            dh = sync(grid.broadcast(h))           # input vector broadcast
+        with t.phase("dpu"):
+            out = sync(f(dw, dh))
+        with t.phase("dpu_cpu"):
+            h = grid.from_banks(out).reshape(-1)[:m]
+    return h, t.times

@@ -1,0 +1,69 @@
+"""PrIM RED — Reduction (paper §4.12).
+
+Per-tasklet local sums + single-tasklet final merge → TPU-native: the
+sequential-grid Pallas reduction per bank, then an exchange-sum across banks
+(host or fabric — the paper's host merge is the "host" mode; fabric psum is
+the beyond-paper option whose delta Fig. 14's Inter-DPU bars motivate).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.banked import BankGrid
+from repro.kernels import ops, ref as kref
+from .common import PhaseTimer, pad_chunks, sync
+
+
+def ref(x: np.ndarray):
+    return x.sum()
+
+
+def pim(grid: BankGrid, x: np.ndarray, via: str = "host",
+        use_kernel: bool = True, variant: str = "single"):
+    """variant (paper §4.12 / appendix 9.2.3):
+      "single"          one accumulator merges per-tasklet partials
+                        (the version the paper finds never worse);
+      "tree-barrier"    log2 tree merge with a barrier per level;
+      "tree-handshake"  log2 tree merge with pairwise handshakes.
+    On TPU the tasklet tree becomes an on-bank pairwise-halving reduction
+    (levels are data-dependency-barriered by construction; the handshake
+    variant models the paper's pairwise version with per-level slicing)."""
+    t = PhaseTimer()
+    with t.phase("cpu_dpu"):
+        xc, n = pad_chunks(x, grid.n_banks)
+        dx = sync(grid.to_banks(xc))
+
+    def local_single(xb):
+        s = ops.reduce_sum(xb[0]) if use_kernel else kref.reduce_sum(xb[0])
+        return s[None]
+
+    def local_tree(xb, pairwise: bool):
+        # per-"tasklet" partials: 16 lanes, then log2 tree merge
+        v = xb[0]
+        lanes = 16
+        per = -(-v.shape[0] // lanes)
+        pad = jnp.pad(v, (0, per * lanes - v.shape[0]))
+        parts = pad.reshape(lanes, per).sum(axis=1)       # 16 partials
+        while parts.shape[0] > 1:                          # tree levels
+            half = parts.shape[0] // 2
+            if pairwise:      # handshake: explicit pair slices
+                parts = parts[:half] + parts[half:]
+            else:             # barrier: same math, level-at-once reshape
+                parts = parts.reshape(2, half).sum(axis=0)
+        return parts
+
+    if variant == "single":
+        f = grid.bank_local(local_single)
+    elif variant == "tree-barrier":
+        f = grid.bank_local(lambda xb: local_tree(xb, False))
+    elif variant == "tree-handshake":
+        f = grid.bank_local(lambda xb: local_tree(xb, True))
+    else:
+        raise ValueError(variant)
+    with t.phase("dpu"):
+        partials = sync(f(dx))
+    with t.phase("inter_dpu"):
+        total = grid.exchange_sum(partials, via=via)
+    with t.phase("dpu_cpu"):
+        return np.asarray(total).reshape(()), t.times

@@ -1,0 +1,79 @@
+"""PrIM SCAN — exclusive prefix sum, SSA and RSS variants (paper §4.13).
+
+SCAN-SSA (scan-scan-add):   local scan → host scans per-bank last elements →
+                            local add of the per-bank offset.
+SCAN-RSS (reduce-scan-scan): local reduce → host scans per-bank totals →
+                            local scan + offset.
+
+The inter-bank step is `exchange_scan` (host mode = the paper's CPU scan;
+fabric mode = all_gather + masked sum, the beyond-paper option).  The paper's
+access-count tradeoff (RSS: 3N+1 vs SSA: 4N) is reproduced by the DPU-phase
+timing split.  On-bank scans use the sequential-grid Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.banked import BankGrid
+from repro.kernels import ops
+from .common import PhaseTimer, pad_chunks, sync
+
+
+def ref(x: np.ndarray) -> np.ndarray:
+    c = np.cumsum(x)
+    return np.concatenate([[np.int64(0).astype(x.dtype)], c[:-1]])
+
+
+def pim_ssa(grid: BankGrid, x: np.ndarray, via: str = "host",
+            use_kernel: bool = True):
+    t = PhaseTimer()
+    with t.phase("cpu_dpu"):
+        xc, n = pad_chunks(x, grid.n_banks)
+        dx = sync(grid.to_banks(xc))
+
+    def local_scan(xb):
+        v = xb[0]
+        s = ops.scan_exclusive(v) if use_kernel else \
+            jnp.cumsum(v) - v
+        return s[None], (s[-1] + v[-1])[None]
+
+    f1 = grid.bank_local(local_scan)
+    with t.phase("dpu"):
+        scans, lasts = sync(f1(dx))
+    with t.phase("inter_dpu"):
+        offsets = grid.exchange_scan(lasts, via=via)
+    f2 = grid.bank_local(lambda sb, ob: sb + ob[:, None])
+    with t.phase("dpu"):
+        out = sync(f2(scans, offsets))
+    with t.phase("dpu_cpu"):
+        host = grid.from_banks(out).reshape(-1)[:n]
+    return host, t.times
+
+
+def pim_rss(grid: BankGrid, x: np.ndarray, via: str = "host",
+            use_kernel: bool = True):
+    t = PhaseTimer()
+    with t.phase("cpu_dpu"):
+        xc, n = pad_chunks(x, grid.n_banks)
+        dx = sync(grid.to_banks(xc))
+
+    f1 = grid.bank_local(
+        lambda xb: (ops.reduce_sum(xb[0]) if use_kernel
+                    else jnp.sum(xb[0]))[None])
+    with t.phase("dpu"):
+        totals = sync(f1(dx))
+    with t.phase("inter_dpu"):
+        offsets = grid.exchange_scan(totals, via=via)
+
+    def local_scan(xb, ob):
+        v = xb[0]
+        s = ops.scan_exclusive(v) if use_kernel else jnp.cumsum(v) - v
+        return (s + ob[0])[None]
+
+    f2 = grid.bank_local(local_scan)
+    with t.phase("dpu"):
+        out = sync(f2(dx, offsets))
+    with t.phase("dpu_cpu"):
+        host = grid.from_banks(out).reshape(-1)[:n]
+    return host, t.times

@@ -1,0 +1,59 @@
+"""PrIM SEL — database Select (paper §4.4): drop elements satisfying the
+predicate, keep the rest.
+
+Decomposition: array chunks → banks; inside a bank the tasklet handshake
+prefix-sum becomes a local exclusive scan over keep-flags; compacted chunks
+have *different* lengths per bank, so the final merge uses serial DPU→CPU
+retrieval exactly like the paper (parallel transfers are illegal for ragged
+buffers — Key Obs./PR-5).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.banked import BankGrid
+from .common import PhaseTimer, pad_chunks, sync
+
+PRED_MOD = 2   # predicate: drop x where x % 2 == 0 (paper uses a compare)
+
+
+def ref(x: np.ndarray) -> np.ndarray:
+    return x[x % PRED_MOD != 0]
+
+
+def _local_compact(xb, valid_len):
+    keep = (xb % PRED_MOD != 0) & (jnp.arange(xb.shape[0]) < valid_len)
+    # handshake prefix-sum → scatter kept elements to their compacted slot;
+    # dropped elements scatter out of bounds (mode="drop")
+    idx = jnp.where(keep, jnp.cumsum(keep) - 1, xb.shape[0])
+    out = jnp.zeros_like(xb).at[idx].set(xb, mode="drop")
+    count = jnp.sum(keep.astype(jnp.int32))
+    return out, count
+
+
+def pim(grid: BankGrid, x: np.ndarray):
+    t = PhaseTimer()
+    n_banks = grid.n_banks
+    with t.phase("cpu_dpu"):
+        xc, n = pad_chunks(x, n_banks)
+        per = xc.shape[1]
+        lens = np.full(n_banks, per, np.int32)
+        lens[-1] = per - (per * n_banks - n)
+        dx = sync(grid.to_banks(xc))
+        dl = sync(grid.to_banks(lens))
+
+    def local(xb, lb):
+        out, count = _local_compact(xb[0], lb[0])
+        return out[None], count[None]
+
+    f = grid.bank_local(local)
+    with t.phase("dpu"):
+        buf, counts = sync(f(dx, dl))
+    with t.phase("dpu_cpu"):
+        # ragged retrieve: serial, like dpu_copy_from in the paper
+        bufs = grid.from_banks(buf)
+        cnts = grid.from_banks(counts).reshape(-1)
+    with t.phase("inter_dpu"):
+        host = np.concatenate([bufs[i, :cnts[i]] for i in range(n_banks)])
+    return host, t.times

@@ -1,0 +1,69 @@
+"""PrIM SpMV — Sparse Matrix-Vector Multiply (paper §4.3).
+
+Decomposition: matrix rows split evenly across banks; dense vector replicated
+(broadcast).  The paper uses CSR with per-row fine-grained DMA; the TPU-native
+layout is padded ELL (DESIGN.md §2, PR-4 "coarse-grained" choice).  Ragged
+per-bank input sizes force *serial* CPU→DPU transfers in the paper — we keep
+equal ELL padding so parallel transfers stay legal, and report the padding
+overhead instead (the honest TPU translation of that cost).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from jax.sharding import PartitionSpec as P
+
+from repro.core.banked import AXIS, BankGrid
+from repro.kernels import ops, ref as kref
+from .common import PhaseTimer, pad_chunks, sync
+
+
+def csr_to_ell(indptr, indices, data, n_rows):
+    """Convert CSR to padded ELL (cols == -1 ⇒ padding)."""
+    counts = np.diff(indptr)
+    k = max(int(counts.max()), 1) if len(counts) else 1
+    cols = np.full((n_rows, k), -1, np.int32)
+    vals = np.zeros((n_rows, k), np.float32)
+    for r in range(n_rows):
+        c = indptr[r + 1] - indptr[r]
+        cols[r, :c] = indices[indptr[r]:indptr[r + 1]]
+        vals[r, :c] = data[indptr[r]:indptr[r + 1]]
+    return vals, cols
+
+
+def random_csr(rows, ncols, nnz_per_row, seed=0):
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, nnz_per_row + 1, size=rows)
+    indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+    indices = np.concatenate(
+        [np.sort(rng.choice(ncols, size=c, replace=False)) for c in counts]
+    ).astype(np.int32) if counts.sum() else np.zeros(0, np.int32)
+    data = rng.normal(size=int(counts.sum())).astype(np.float32)
+    return indptr, indices, data
+
+
+def ref(vals: np.ndarray, cols: np.ndarray, x: np.ndarray) -> np.ndarray:
+    return np.asarray(kref.spmv_ell(vals, cols, x))
+
+
+def pim(grid: BankGrid, vals: np.ndarray, cols: np.ndarray, x: np.ndarray,
+        use_kernel: bool = False):
+    t = PhaseTimer()
+    with t.phase("cpu_dpu"):
+        vc, m = pad_chunks(vals, grid.n_banks)
+        cc, _ = pad_chunks(cols, grid.n_banks, fill=-1)
+        dv = sync(grid.to_banks(vc))
+        dc = sync(grid.to_banks(cc))
+        dx = sync(grid.broadcast(np.asarray(x)))
+
+    def local(vb, cb, xb):
+        if use_kernel:
+            return ops.spmv_ell(vb[0], cb[0], xb)[None]
+        return kref.spmv_ell(vb[0], cb[0], xb)[None]
+
+    f = grid.bank_local(local, in_specs=(P(AXIS), P(AXIS), P()))
+    with t.phase("dpu"):
+        out = sync(f(dv, dc, dx))
+    with t.phase("dpu_cpu"):
+        host = grid.from_banks(out).reshape(-1)[:m]
+    return host, t.times

@@ -1,0 +1,50 @@
+"""PrIM TRNS — Matrix Transposition (paper §4.14).
+
+The paper's 3-step tiled in-place algorithm for an (M'·m) × (N'·n) array:
+  step 1: M×N' transpose of n-sized tiles — performed *by the CPU→DPU
+          transfer itself* (n-sized transfers land tiles bank-major);
+  step 2: per-bank m×n tile transposes (one tasklet per tile);
+  step 3: per-bank M'×n transpose of m-sized tiles (collaborative, mutex
+          flags in the paper — a single vectorized permutation here).
+Result gathered by the host.  Validated against ``x.T``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.banked import BankGrid
+from .common import PhaseTimer, sync
+
+
+def ref(x: np.ndarray) -> np.ndarray:
+    return x.T
+
+
+def pim(grid: BankGrid, x: np.ndarray, m: int = 8, n: int = 8):
+    """x: (M'*m, N'*n). N' must be a multiple of n_banks (pad upstream)."""
+    t = PhaseTimer()
+    M, N = x.shape
+    Mp, Np = M // m, N // n
+    assert Mp * m == M and Np * n == N, "factorization must divide shape"
+    assert Np % grid.n_banks == 0, "N' must divide across banks"
+
+    with t.phase("cpu_dpu"):
+        # step 1: (M'*m, N', n) -> (N', M'*m, n): the transfer relayout
+        step1 = np.ascontiguousarray(
+            np.asarray(x).reshape(M, Np, n).transpose(1, 0, 2))
+        dx = sync(grid.to_banks(step1))        # N' rows split across banks
+
+    def local(xb):
+        b = xb.shape[0]                         # local N' rows
+        # step 2: transpose each (m, n) tile -> (N'_loc, M', n, m)
+        tiles = xb.reshape(b, Mp, m, n).transpose(0, 1, 3, 2)
+        # step 3: per N'-row, transpose the (M', n) grid of m-tiles
+        return tiles.transpose(0, 2, 1, 3)      # (N'_loc, n, M', m)
+
+    f = grid.bank_local(local)
+    with t.phase("dpu"):
+        out = sync(f(dx))
+    with t.phase("dpu_cpu"):
+        host = grid.from_banks(out).reshape(N, M)
+    return host, t.times

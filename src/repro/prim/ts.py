@@ -1,0 +1,69 @@
+"""PrIM TS — Time Series Analysis / Matrix Profile (paper §4.7).
+
+Decomposition: the series is split across banks **with query-length halo
+overlap** (the paper: "adding the necessary overlapping"); the query is
+replicated; each bank computes z-normalized Euclidean distances for its
+slice's subsequence alignments and keeps a local (min, argmin); the host
+merges per-bank minima (tiny inter-DPU phase).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import PartitionSpec as P
+
+from repro.core.banked import AXIS, BankGrid
+from .common import PhaseTimer, sync
+
+
+def _znorm_dists(series, query):
+    """Distance of z-normed query vs every z-normed window of series."""
+    m = query.shape[0]
+    q = (query - query.mean()) / (query.std() + 1e-12)
+    n_win = series.shape[0] - m + 1
+    idx = jnp.arange(n_win)[:, None] + jnp.arange(m)[None, :]
+    win = series[idx]                                   # (n_win, m)
+    mu = win.mean(axis=1, keepdims=True)
+    sd = win.std(axis=1, keepdims=True) + 1e-12
+    wz = (win - mu) / sd
+    return jnp.sqrt(jnp.sum((wz - q[None, :]) ** 2, axis=1))
+
+
+def ref(series: np.ndarray, query: np.ndarray) -> tuple[float, int]:
+    d = np.asarray(_znorm_dists(jnp.asarray(series), jnp.asarray(query)))
+    return float(d.min()), int(d.argmin())
+
+
+def pim(grid: BankGrid, series: np.ndarray, query: np.ndarray):
+    t = PhaseTimer()
+    n_banks = grid.n_banks
+    m = len(query)
+    with t.phase("cpu_dpu"):
+        n = len(series)
+        per = -(-n // n_banks)
+        # halo: each bank also needs the next m-1 elements
+        padded = np.concatenate([series,
+                                 np.full(per * n_banks + m - 1 - n,
+                                         np.inf, series.dtype)])
+        chunks = np.stack([padded[i * per: i * per + per + m - 1]
+                           for i in range(n_banks)])
+        ds = sync(grid.to_banks(chunks))
+        dq = sync(grid.broadcast(np.asarray(query)))
+
+    def local(sb, qb):
+        d = _znorm_dists(sb[0], qb)
+        d = jnp.where(jnp.isnan(d), jnp.inf, d)
+        i = jnp.argmin(d)
+        return d[i][None], i.astype(jnp.int32)[None]
+
+    f = grid.bank_local(local, in_specs=(P(AXIS), P()))
+    with t.phase("dpu"):
+        dmin, darg = sync(f(ds, dq))
+    with t.phase("dpu_cpu"):
+        mins = grid.from_banks(dmin).reshape(-1)
+        args = grid.from_banks(darg).reshape(-1)
+    with t.phase("inter_dpu"):
+        b = int(np.argmin(mins))
+        result = (float(mins[b]), int(b * per + args[b]))
+    return result, t.times

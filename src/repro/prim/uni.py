@@ -1,0 +1,68 @@
+"""PrIM UNI — database Unique (paper §4.5): collapse runs of equal values.
+
+Like SEL, plus the paper's extra handshake: each bank needs the *last* value
+of the previous bank to decide whether its first element starts a new run.
+That boundary exchange is an explicit inter-DPU phase (host-mediated, one
+value per bank — exactly the paper's description).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.banked import BankGrid
+from .common import PhaseTimer, pad_chunks, sync
+
+
+def ref(x: np.ndarray) -> np.ndarray:
+    if len(x) == 0:
+        return x
+    keep = np.concatenate([[True], x[1:] != x[:-1]])
+    return x[keep]
+
+
+def _local_unique(xb, prev_last, valid_len):
+    first_new = xb[0] != prev_last
+    keep = jnp.concatenate([first_new[None], xb[1:] != xb[:-1]])
+    keep &= jnp.arange(xb.shape[0]) < valid_len
+    idx = jnp.where(keep, jnp.cumsum(keep) - 1, xb.shape[0])
+    out = jnp.zeros_like(xb).at[idx].set(xb, mode="drop")
+    return out, jnp.sum(keep.astype(jnp.int32))
+
+
+def pim(grid: BankGrid, x: np.ndarray):
+    t = PhaseTimer()
+    n_banks = grid.n_banks
+    with t.phase("cpu_dpu"):
+        xc, n = pad_chunks(x, n_banks)
+        per = xc.shape[1]
+        lens = np.full(n_banks, per, np.int32)
+        lens[-1] = per - (per * n_banks - n)
+        dx = sync(grid.to_banks(xc))
+        dl = sync(grid.to_banks(lens))
+
+    with t.phase("inter_dpu"):
+        # boundary handshake via host: bank i gets last element of bank i-1
+        # (bank 0 gets a sentinel that never equals data)
+        last = xc[:, -1]
+        sentinel = np.array(np.iinfo(x.dtype).min if np.issubdtype(
+            x.dtype, np.integer) else np.nan, x.dtype)
+        prev = np.concatenate([[sentinel], last[:-1]])
+        # bank i's previous *valid* last: account for padding in bank i-1
+        for i in range(1, n_banks):
+            prev[i] = xc[i - 1, lens[i - 1] - 1]
+        dprev = sync(grid.to_banks(prev))
+
+    def local(xb, pb, lb):
+        out, count = _local_unique(xb[0], pb[0], lb[0])
+        return out[None], count[None]
+
+    f = grid.bank_local(local)
+    with t.phase("dpu"):
+        buf, counts = sync(f(dx, dprev, dl))
+    with t.phase("dpu_cpu"):
+        bufs = grid.from_banks(buf)
+        cnts = grid.from_banks(counts).reshape(-1)
+    with t.phase("inter_dpu"):
+        host = np.concatenate([bufs[i, :cnts[i]] for i in range(n_banks)])
+    return host, t.times

@@ -1,0 +1,4 @@
+from .elastic import carve_mesh, reshard, shardings_for, simulate_failure
+from .straggler import StepMonitor, StragglerConfig, Watchdog
+__all__ = ["carve_mesh", "reshard", "shardings_for", "simulate_failure",
+           "StepMonitor", "StragglerConfig", "Watchdog"]

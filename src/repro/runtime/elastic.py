@@ -1,0 +1,70 @@
+"""Elastic mesh management: re-carve the device mesh after failures /
+resizes and re-shard training state onto it.
+
+At 1000+ node scale, chips die mid-run.  The recovery contract here:
+  1. ``carve_mesh(devices, model_parallel)`` builds the largest
+     (data, model)-factorizable mesh from whatever devices survive
+     (dropping at most model_parallel-1 stragglers).
+  2. ``reshard(tree, mesh, specs)`` places host or device arrays onto the
+     new mesh (checkpoint restore path uses the same call).
+  3. The data pipeline is stateless-seekable and the optimizer state lives
+     in the checkpoint, so resume = carve + restore + continue at step k.
+
+The multi-pod "pod" axis folds into "data" on re-carve (a degraded 1.5-pod
+job keeps running data-parallel across the survivors).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def carve_mesh(devices=None, model_parallel: int = 1,
+               axis_names=("data", "model")) -> Mesh:
+    """Largest usable (data, model) mesh from the surviving device list."""
+    devices = list(devices if devices is not None else jax.devices())
+    usable = (len(devices) // model_parallel) * model_parallel
+    if usable == 0:
+        raise RuntimeError(
+            f"{len(devices)} devices cannot host model_parallel="
+            f"{model_parallel}")
+    grid = np.array(devices[:usable]).reshape(-1, model_parallel)
+    return Mesh(grid, axis_names)
+
+
+def shardings_for(mesh: Mesh, specs):
+    """Congruent tree of NamedSharding from a tree of PartitionSpec,
+    dropping spec axes the mesh doesn't have (pod-axis fold-down)."""
+    names = set(mesh.axis_names)
+
+    def fix(spec):
+        parts = []
+        for p in tuple(spec):
+            if p is None:
+                parts.append(None)
+            elif isinstance(p, (tuple, list)):
+                kept = tuple(a for a in p if a in names)
+                parts.append(kept if kept else None)
+            else:
+                parts.append(p if p in names else None)
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(fix, specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def reshard(tree, mesh: Mesh, specs):
+    """Place every leaf with its spec on the (new) mesh."""
+    sh = shardings_for(mesh, specs)
+    return jax.tree.map(
+        lambda a, s: jax.device_put(np.asarray(jax.device_get(a)), s),
+        tree, sh)
+
+
+def simulate_failure(mesh: Mesh, n_lost: int, model_parallel: int) -> Mesh:
+    """Test hook: drop the last n_lost devices and re-carve."""
+    devices = list(mesh.devices.flat)[:-n_lost] if n_lost else \
+        list(mesh.devices.flat)
+    return carve_mesh(devices, model_parallel, mesh.axis_names[-2:])

@@ -1,0 +1,21 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here by design — tests run on the real
+device count (1 CPU device); multi-bank behaviour is validated in subprocess
+tests that set --xla_force_host_platform_device_count themselves."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def bank_grid():
+    from repro.core import make_bank_grid
+    return make_bank_grid()

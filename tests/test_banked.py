@@ -1,0 +1,76 @@
+"""Banked execution model + transfer engine + HLO accounting units."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import assert_collective_free, hlo, transfer as tx
+from repro.core.banked import AXIS
+
+
+def test_bank_local_is_collective_free(bank_grid):
+    x = bank_grid.to_banks(np.arange(8, dtype=np.int32))
+    f = bank_grid.bank_local(lambda v: v * 2 + 1)
+    assert_collective_free(f, x)
+    assert (np.asarray(f(x)) == np.arange(8) * 2 + 1).all()
+
+
+def test_exchange_sum_and_scan(bank_grid):
+    parts = bank_grid.to_banks(np.arange(6, dtype=np.int32).reshape(-1, 1)
+                               if bank_grid.n_banks == 1 else
+                               np.arange(bank_grid.n_banks, dtype=np.int32)
+                               .reshape(-1, 1))
+    s = np.asarray(bank_grid.exchange_sum(parts))
+    assert s.sum() >= 0
+    tot = bank_grid.to_banks(np.full((bank_grid.n_banks,), 5, np.int32))
+    excl = np.asarray(bank_grid.exchange_scan(tot, via="host"))
+    assert (excl == 5 * np.arange(bank_grid.n_banks)).all()
+
+
+def test_transfer_modes_and_relayout(bank_grid):
+    buf = np.arange(64, dtype=np.int64).reshape(bank_grid.n_banks, -1)
+    dev, rec = tx.push_parallel(bank_grid, buf)
+    assert rec.nbytes == buf.nbytes and rec.seconds >= 0
+    host, rec2 = tx.pull_parallel(bank_grid, dev)
+    assert (host == buf).all()
+    _, rec3 = tx.push_broadcast(bank_grid, buf[0])
+    assert rec3.kind == "cpu_dpu_broadcast"
+    b, n = tx.to_banked(np.arange(37), 4, axis=0)
+    assert (tx.from_banked(b, n) == np.arange(37)).all()
+
+
+# -- HLO parsing units ---------------------------------------------------------
+
+FAKE_HLO = """
+  %ag = bf16[16,1024]{1,0} all-gather(%x), channel_id=1, replica_groups=[2,8]<=[16], dimensions={0}
+  %ar = f32[512]{0} all-reduce(%y), channel_id=2, replica_groups=[4,4]<=[16], to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(%z), channel_id=3, replica_groups=[2,8]<=[16], dimensions={0}
+  %cp = u8[100]{0} collective-permute(%w), channel_id=4, source_target_pairs={{0,1}}
+  %done = f32[8] all-reduce-done(%start)
+"""
+
+
+def test_collective_parser_kinds_and_bytes():
+    s = hlo.collective_stats(FAKE_HLO)
+    assert s.count == 4                      # -done not double counted
+    by = s.by_kind
+    assert by["all-gather"]["bytes"] == 16 * 1024 * 2 / 8   # result / group(8)
+    assert by["all-reduce"]["bytes"] == 512 * 4
+    assert by["reduce-scatter"]["bytes"] == 64 * 4 * 8      # result × group
+    assert by["collective-permute"]["bytes"] == 100
+
+
+def test_shape_bytes():
+    assert hlo.shape_bytes("bf16[8,128]{1,0}") == 8 * 128 * 2
+    assert hlo.shape_bytes("f32[]") == 4
+    assert hlo.shape_bytes("s8[10]") == 10
+
+
+def test_dma_latency_sweep_fits_linear_model():
+    """The paper's Eq.3 methodology applied to this machine: α, β > 0."""
+    from repro.core import characterize
+    rows = characterize.dma_latency_sweep(sizes=(64, 1024, 16384, 262144),
+                                          reps=5)
+    alpha, beta = characterize.fit_dma_model(rows, freq_hz=1.0)
+    assert beta > 0, "per-byte cost must be positive"

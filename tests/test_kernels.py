@@ -1,0 +1,175 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert_allclose vs ref.py
+(pure-jnp oracle). Kernels execute in Pallas interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+R = np.random.default_rng(7)
+
+
+def ok(a, b, tol=2e-3):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=tol, atol=tol)
+
+
+# -- attention ----------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,KVH,S,T,D", [
+    (1, 4, 4, 128, 128, 64),      # MHA aligned
+    (2, 4, 2, 256, 256, 128),     # GQA aligned
+    (1, 6, 2, 100, 100, 80),      # ragged seq + head dim
+    (1, 8, 1, 64, 64, 120),       # MQA, danube head dim
+    (1, 3, 3, 96, 48, 160),       # cross shapes, stablelm head dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_attention_sweep(B, H, KVH, S, T, D, dtype):
+    q = jnp.asarray(R.normal(size=(B, H, S, D)), dtype)
+    k = jnp.asarray(R.normal(size=(B, KVH, T, D)), dtype)
+    v = jnp.asarray(R.normal(size=(B, KVH, T, D)), dtype)
+    causal = S == T
+    out = ops.attention(q, k, v, causal=causal)
+    want = ref.attention(q, k, v, causal=causal)
+    ok(out, want, 2e-2 if dtype == jnp.bfloat16 else 2e-3)
+
+
+@pytest.mark.parametrize("window", [16, 64, 1000])
+def test_attention_sliding_window(window):
+    q = jnp.asarray(R.normal(size=(1, 4, 128, 64)), jnp.float32)
+    k = jnp.asarray(R.normal(size=(1, 2, 128, 64)), jnp.float32)
+    v = jnp.asarray(R.normal(size=(1, 2, 128, 64)), jnp.float32)
+    ok(ops.attention(q, k, v, causal=True, window=window),
+       ref.attention(q, k, v, causal=True, window=window))
+
+
+def test_decode_attention_matches_full():
+    B, H, KVH, T, D = 2, 4, 2, 32, 64
+    q = jnp.asarray(R.normal(size=(B, H, 1, D)), jnp.float32)
+    kc = jnp.asarray(R.normal(size=(B, KVH, T, D)), jnp.float32)
+    vc = jnp.asarray(R.normal(size=(B, KVH, T, D)), jnp.float32)
+    lens = jnp.asarray([T, T], jnp.int32)
+    out = ops.decode_attention(q, kc, vc, lens)
+    # equals non-causal attention of the single query over the full cache
+    want = ref.attention(q, kc, vc, causal=False)
+    ok(out, want)
+
+
+# -- gemv ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n", [(128, 512), (64, 64), (100, 300), (7, 1000),
+                                 (1024, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemv_sweep(m, n, dtype):
+    a = jnp.asarray(R.normal(size=(m, n)), dtype)
+    x = jnp.asarray(R.normal(size=(n,)), dtype)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    ok(ops.gemv(a, x), ref.gemv(a, x), tol)
+
+
+# -- reduce / scan ---------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [128, 4096, 1000, 12345])
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32])
+def test_reduce_scan_sweep(n, dtype):
+    if dtype == jnp.int32:
+        x = jnp.asarray(R.integers(0, 100, size=n), dtype)
+    else:
+        x = jnp.asarray(R.normal(size=n), dtype)
+    ok(ops.reduce_sum(x), ref.reduce_sum(x), 1e-4)
+    ok(ops.scan_inclusive(x), ref.scan_inclusive(x), 1e-3)
+    ok(ops.scan_exclusive(x), ref.scan_exclusive(x), 1e-3)
+
+
+# -- histogram --------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,nbins", [(4096, 256), (10000, 64), (500, 1024)])
+def test_histogram_sweep(n, nbins):
+    v = jnp.asarray(R.integers(0, nbins, size=n), jnp.int32)
+    got = ops.histogram(v, nbins)
+    assert (np.asarray(got) == np.asarray(ref.histogram(v, nbins))).all()
+    assert int(got.sum()) == n
+
+
+# -- spmv ------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,k,n", [(128, 8, 256), (200, 16, 512),
+                                      (64, 1, 128)])
+def test_spmv_sweep(rows, k, n):
+    cols = R.integers(-1, n, size=(rows, k)).astype(np.int32)
+    vals = R.normal(size=(rows, k)).astype(np.float32)
+    x = R.normal(size=(n,)).astype(np.float32)
+    ok(ops.spmv_ell(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(x)),
+       ref.spmv_ell(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(x)),
+       1e-4)
+
+
+# -- moe gmm ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("E,C,d,f", [(4, 64, 96, 160), (8, 128, 128, 128),
+                                     (2, 16, 64, 48)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_gmm_sweep(E, C, d, f, dtype):
+    xg = jnp.asarray(R.normal(size=(E, C, d)), dtype)
+    w = jnp.asarray(R.normal(size=(E, d, f)), dtype)
+    counts = jnp.asarray(R.integers(0, C + 1, size=E), jnp.int32)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-3
+    ok(ops.moe_gmm(xg, w, counts), ref.moe_gmm(xg, w, counts), tol)
+
+
+# -- ssd scan ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 256, 3, 32, 16, 64), (1, 128, 1, 64, 8, 128), (1, 100, 2, 16, 4, 32)])
+def test_ssd_sweep(B, S, H, P, N, chunk):
+    x = jnp.asarray(R.normal(size=(B, S, H, P)), jnp.float32)
+    a = jnp.asarray(R.uniform(0.3, 1.0, size=(B, S, H)), jnp.float32)
+    b = jnp.asarray(R.normal(size=(B, S, N)), jnp.float32)
+    c = jnp.asarray(R.normal(size=(B, S, N)), jnp.float32)
+    y, h = ops.ssd_scan(x, a, b, c, chunk=chunk)
+    yr, hr = ref.ssd_scan(x, a, b, c)
+    ok(y, yr, 5e-3)
+    ok(h, hr, 5e-3)
+
+
+# -- §Perf optimized variants (must match their references exactly) ------------
+
+def test_decode_attention_grouped_matches_ref():
+    B, H, KVH, T, D = 2, 8, 2, 64, 32
+    q = jnp.asarray(R.normal(size=(B, H, 1, D)), jnp.float32)
+    kc = jnp.asarray(R.normal(size=(B, KVH, T, D)), jnp.float32)
+    vc = jnp.asarray(R.normal(size=(B, KVH, T, D)), jnp.float32)
+    lens = jnp.asarray([10, 64], jnp.int32)
+    for w in (None, 16):
+        a = ref.decode_attention(q, kc, vc, lens, window=w)
+        b = ref.decode_attention_grouped(q, kc, vc, lens, window=w)
+        ok(a, b, 1e-4)
+
+
+def test_chunked_mlstm_matches_parallel():
+    import jax
+    from repro.models import xlstm
+    from repro.models.layers import ModelConfig
+    cfg = ModelConfig(d_model=64, n_heads=2, n_kv_heads=2, dtype=jnp.float32)
+    params, _ = xlstm.init_mlstm(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 64), jnp.float32)
+    full = xlstm.apply_mlstm(params, cfg, x)
+    for chunk in (8, 32, 64):
+        ch = xlstm.apply_mlstm_chunked(params, cfg, x, chunk=chunk)
+        ok(full, ch, 1e-4)
+
+
+def test_chunked_ce_matches_dense():
+    import jax
+    from repro.configs import get_config
+    from repro.models import transformer
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params, _ = transformer.init(jax.random.PRNGKey(0), cfg)
+    k = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(k, (2, 16), 0, cfg.vocab),
+             "labels": jax.random.randint(k, (2, 16), 0, cfg.vocab)}
+    l0, _ = transformer.loss_fn(params, cfg, batch)
+    for nch in (1, 3, 16):
+        l1, _ = transformer.loss_fn(params, cfg, batch, loss_chunks=nch)
+        assert abs(float(l0) - float(l1)) < 1e-4

@@ -1,0 +1,93 @@
+"""The analytical DPU model must reproduce the paper's published
+measurements (Figs. 4-6, §3) — this is the quantitative reproduction gate."""
+import numpy as np
+import pytest
+
+from repro.core.perfmodel import (DpuModel, DpuSystemModel, RooflineTerms,
+                                  TpuModel)
+
+M = DpuModel()          # 2,556-DPU system, 350 MHz
+
+
+# paper Fig. 4 measurements (MOPS) vs model predictions
+FIG4 = [
+    ("add", "int32", 58.56), ("sub", "int32", 58.56),
+    ("add", "int64", 50.16), ("mul", "int32", 10.27),
+    ("div", "int32", 11.27), ("mul", "int64", 2.56), ("div", "int64", 1.40),
+    ("add", "float", 4.91), ("sub", "float", 4.59), ("mul", "float", 1.91),
+    ("div", "float", 0.34), ("add", "double", 3.32), ("sub", "double", 3.11),
+    ("mul", "double", 0.53), ("div", "double", 0.16),
+]
+
+
+@pytest.mark.parametrize("op,dtype,paper_mops", FIG4)
+def test_fig4_arith_throughput(op, dtype, paper_mops):
+    got = M.arith_throughput(op, dtype, tasklets=16) / 1e6
+    assert got == pytest.approx(paper_mops, rel=0.35), (op, dtype)
+
+
+def test_fig4_saturation_at_11_tasklets():
+    t10 = M.arith_throughput("add", "int32", tasklets=10)
+    t11 = M.arith_throughput("add", "int32", tasklets=11)
+    t16 = M.arith_throughput("add", "int32", tasklets=16)
+    assert t10 < t11 == t16          # Key Observation 1
+
+
+# paper Fig. 5 (WRAM STREAM, MB/s)
+FIG5 = [("copy", 2818.98), ("add", 1682.46), ("scale", 42.03),
+        ("triad", 61.66)]
+
+
+@pytest.mark.parametrize("which,paper_mbps", FIG5)
+def test_fig5_wram_stream(which, paper_mbps):
+    got = M.wram_stream(which, tasklets=16) / 1e6
+    assert got == pytest.approx(paper_mbps, rel=0.15), which
+
+
+# paper Fig. 6 / §3.2.1 (MRAM DMA model)
+def test_fig6_mram_model():
+    assert M.mram_peak_bandwidth == pytest.approx(700e6)     # 2 B/cyc @350MHz
+    assert M.mram_bandwidth(2048) / 1e6 == pytest.approx(628.23, rel=0.05)
+    # latency grows 74% while size grows 16x (paper §3.2.1 3rd observation)
+    ratio = M.mram_latency_cycles(128) / M.mram_latency_cycles(8)
+    assert ratio == pytest.approx(1.74, rel=0.02)
+
+
+def test_fig6_alpha_beta_fit_recovers_model():
+    sizes = [8, 32, 128, 512, 2048]
+    cycles = [M.mram_latency_cycles(s) for s in sizes]
+    alpha, beta = DpuModel.fit_dma(sizes, cycles)
+    assert alpha == pytest.approx(M.alpha_read, rel=1e-6)
+    assert beta == pytest.approx(M.beta, rel=1e-6)
+
+
+def test_key_takeaway_1_compute_bound():
+    """OI saturation below 1/4 OP/B (paper: DPU fundamentally compute-bound)."""
+    sat = M.saturation_intensity("add", "int32")
+    assert sat < 0.25
+    # memory-bound below, compute-bound above
+    low = M.attainable_throughput("add", "int32", sat / 8)
+    high = M.attainable_throughput("add", "int32", sat * 8)
+    assert low < M.arith_throughput("add", "int32")
+    assert high == M.arith_throughput("add", "int32")
+
+
+def test_system_aggregates():
+    sys_ = DpuSystemModel()
+    # paper §3.2.2: 1.7 TB/s theoretical aggregate for 2,556 DPUs
+    assert sys_.n_dpus * sys_.dpu.mram_peak_bandwidth == \
+        pytest.approx(1.79e12, rel=0.01)
+    # Fig. 10: parallel beats serial by >10x at a full rank
+    assert sys_.transfer_time(1 << 30, "parallel") * 10 < \
+        sys_.transfer_time(1 << 30, "serial")
+
+
+def test_roofline_terms():
+    t = RooflineTerms(flops=197e12 * 256, hbm_bytes=819e9 * 256,
+                      collective_bytes=0.0, chips=256,
+                      model_flops=197e12 * 256)
+    assert t.t_compute == pytest.approx(1.0)
+    assert t.t_memory == pytest.approx(1.0)
+    assert t.bound in ("compute", "memory")
+    assert t.roofline_fraction == pytest.approx(1.0)
+    assert TpuModel().ridge_point == pytest.approx(240.5, rel=0.01)

@@ -1,0 +1,125 @@
+"""PrIM suite: every workload's banked implementation vs its gold ref
+(single-bank here; 8-bank agreement in test_multibank.py)."""
+import numpy as np
+import pytest
+
+from repro import prim
+
+
+def test_va(bank_grid, rng):
+    a = rng.integers(0, 100, 1003).astype(np.int32)
+    b = rng.integers(0, 100, 1003).astype(np.int32)
+    out, times = prim.va.pim(bank_grid, a, b)
+    assert (out == prim.va.ref(a, b)).all()
+    assert times.total > 0
+
+
+def test_gemv(bank_grid, rng):
+    A = rng.normal(size=(67, 33)).astype(np.float32)
+    x = rng.normal(size=33).astype(np.float32)
+    out, _ = prim.gemv.pim(bank_grid, A, x)
+    np.testing.assert_allclose(out, prim.gemv.ref(A, x), rtol=1e-4, atol=1e-5)
+
+
+def test_gemv_kernel_path(bank_grid, rng):
+    A = rng.normal(size=(64, 128)).astype(np.float32)
+    x = rng.normal(size=128).astype(np.float32)
+    out, _ = prim.gemv.pim(bank_grid, A, x, use_kernel=True)
+    np.testing.assert_allclose(out, prim.gemv.ref(A, x), rtol=1e-4, atol=1e-4)
+
+
+def test_spmv(bank_grid, rng):
+    ip, ix, dv = prim.spmv.random_csr(53, 40, 6, seed=1)
+    vals, cols = prim.spmv.csr_to_ell(ip, ix, dv, 53)
+    x = rng.normal(size=40).astype(np.float32)
+    out, _ = prim.spmv.pim(bank_grid, vals, cols, x)
+    np.testing.assert_allclose(out, prim.spmv.ref(vals, cols, x),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_sel(bank_grid, rng):
+    x = rng.integers(0, 1000, 509).astype(np.int32)
+    out, _ = prim.sel.pim(bank_grid, x)
+    assert (out == prim.sel.ref(x)).all()
+
+
+def test_uni(bank_grid, rng):
+    x = np.sort(rng.integers(0, 50, 515)).astype(np.int32)
+    out, _ = prim.uni.pim(bank_grid, x)
+    assert (out == prim.uni.ref(x)).all()
+
+
+def test_bs(bank_grid, rng):
+    arr = np.sort(rng.integers(0, 10000, 1000)).astype(np.int32)
+    qs = rng.integers(0, 10000, 101).astype(np.int32)
+    out, _ = prim.bs.pim(bank_grid, arr, qs)
+    assert (out == prim.bs.ref(arr, qs)).all()
+
+
+def test_ts(bank_grid, rng):
+    series = rng.normal(size=507).astype(np.float32)
+    query = rng.normal(size=16).astype(np.float32)
+    (dmin, darg), _ = prim.ts.pim(bank_grid, series, query)
+    rmin, rarg = prim.ts.ref(series, query)
+    assert abs(dmin - rmin) < 1e-3 and darg == rarg
+
+
+def test_bfs(bank_grid):
+    adj = prim.bfs.random_graph(101, 3, seed=2)
+    out, _ = prim.bfs.pim(bank_grid, adj, 0)
+    assert (out == prim.bfs.ref(adj, 0)).all()
+
+
+def test_mlp(bank_grid, rng):
+    ws = [rng.normal(size=(33, 24)).astype(np.float32),
+          rng.normal(size=(17, 33)).astype(np.float32)]
+    x = rng.normal(size=24).astype(np.float32)
+    out, _ = prim.mlp.pim(bank_grid, ws, x)
+    np.testing.assert_allclose(out, prim.mlp.ref(ws, x), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,n,block", [(50, 70, 16), (33, 65, 32)])
+def test_nw(bank_grid, rng, m, n, block):
+    s1 = rng.integers(0, 4, m).astype(np.int32)
+    s2 = rng.integers(0, 4, n).astype(np.int32)
+    out, _ = prim.nw.pim(bank_grid, s1, s2, block=block)
+    assert (out == prim.nw.ref(s1, s2)).all()
+
+
+@pytest.mark.parametrize("variant", ["short", "long"])
+def test_hist(bank_grid, rng, variant):
+    px = rng.integers(0, 256, 5003).astype(np.int32)
+    f = prim.hist.pim_short if variant == "short" else prim.hist.pim_long
+    out, _ = f(bank_grid, px)
+    assert (out == prim.hist.ref(px, 256)).all()
+
+
+@pytest.mark.parametrize("via", ["host", "fabric"])
+def test_red(bank_grid, rng, via):
+    x = rng.integers(0, 100, 5001).astype(np.int32)
+    out, _ = prim.red.pim(bank_grid, x, via=via)
+    assert out == prim.red.ref(x)
+
+
+@pytest.mark.parametrize("variant", ["ssa", "rss"])
+@pytest.mark.parametrize("via", ["host", "fabric"])
+def test_scan(bank_grid, rng, variant, via):
+    x = rng.integers(0, 10, 3001).astype(np.int32)
+    f = prim.scan.pim_ssa if variant == "ssa" else prim.scan.pim_rss
+    out, _ = f(bank_grid, x, via=via)
+    assert (out == prim.scan.ref(x)).all()
+
+
+def test_trns(bank_grid, rng):
+    x = rng.normal(size=(64, 48)).astype(np.float32)
+    out, _ = prim.trns.pim(bank_grid, x, m=8, n=8)
+    assert (out == prim.trns.ref(x)).all()
+
+
+@pytest.mark.parametrize("variant", ["single", "tree-barrier",
+                                     "tree-handshake"])
+def test_red_variants(bank_grid, rng, variant):
+    """Paper appendix 9.2.3: all three RED merge variants agree."""
+    x = rng.integers(0, 100, 4099).astype(np.int32)
+    out, _ = prim.red.pim(bank_grid, x, variant=variant)
+    assert out == prim.red.ref(x)
