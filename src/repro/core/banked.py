@@ -35,6 +35,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import hlo
+from .compat import shard_map
 
 AXIS = "banks"
 
@@ -90,8 +91,8 @@ class BankGrid:
         the lowered phase is asserted collective-free (DPUs cannot talk)."""
         ispec = in_specs if in_specs is not None else P(AXIS)
         ospec = out_specs if out_specs is not None else P(AXIS)
-        mapped = jax.shard_map(fn, mesh=self.mesh, in_specs=ispec,
-                               out_specs=ospec, check_vma=False)
+        mapped = shard_map(fn, mesh=self.mesh, in_specs=ispec,
+                           out_specs=ospec)
         if not check:
             return mapped
 

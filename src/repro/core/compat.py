@@ -1,0 +1,47 @@
+"""Version shims for JAX APIs that moved between releases.
+
+The repo targets the modern spellings (``jax.shard_map(check_vma=...)``,
+``pltpu.CompilerParams``); older releases ship the same functionality as
+``jax.experimental.shard_map.shard_map(check_rep=...)`` and
+``pltpu.TPUCompilerParams``.  Everything else goes through unchanged, so
+there is exactly one place that knows about the rename.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(fn, *, mesh, in_specs, out_specs):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(fn, *, mesh, in_specs, out_specs):
+        return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh``: ``jax.set_mesh`` where it
+    exists, else the Mesh's own context manager (same effect for jit'd
+    code that resolves named shardings against the ambient mesh)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def get_abstract_mesh():
+    """The ambient mesh activated by :func:`set_mesh`."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as mesh_lib
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+def tpu_compiler_params(**kwargs):
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

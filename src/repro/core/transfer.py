@@ -71,6 +71,30 @@ def from_banked(x: np.ndarray, orig_len: int, axis: int = 0) -> np.ndarray:
     return flat[tuple(sl)]
 
 
+# -- chunking (pipelined runtime) --------------------------------------------
+
+def split_chunks(x: np.ndarray, n_chunks: int, axis: int = 0):
+    """Split ``axis`` into ``n_chunks`` equal pieces for pipelined transfer,
+    padding the tail so every chunk has an identical shape (one compiled
+    bank-local phase serves all chunks).  Returns (chunks, orig_len)."""
+    x = np.asarray(x)
+    n = x.shape[axis]
+    if n_chunks < 1:
+        raise ValueError(f"n_chunks must be >= 1, got {n_chunks}")
+    per = -(-n // n_chunks)
+    pad = per * n_chunks - n
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = np.pad(x, widths)
+    sl = [slice(None)] * x.ndim
+    chunks = []
+    for i in range(n_chunks):
+        sl[axis] = slice(i * per, (i + 1) * per)
+        chunks.append(x[tuple(sl)])
+    return chunks, n
+
+
 # -- transfer modes ----------------------------------------------------------
 
 def push_parallel(grid: BankGrid, x, spec: P | None = None):
@@ -103,6 +127,40 @@ def pull_parallel(grid: BankGrid, x):
     host = grid.from_banks(x)
     return host, TransferRecord("dpu_cpu_parallel", _nbytes(host),
                                 time.perf_counter() - t0)
+
+
+# -- async variants (double-buffering building blocks) -----------------------
+#
+# The synchronous modes above block until the copy lands — faithful to the
+# UPMEM SDK, where a transfer and a kernel launch never overlap.  The async
+# variants only *enqueue* the copy: the runtime pipeline issues chunk k+1's
+# scatter while chunk k's bank-local phase is still in flight, which is
+# exactly the overlap the paper's stacked bars show the SDK leaving on the
+# table.  Their records therefore account enqueue cost, not completion.
+
+def push_parallel_async(grid: BankGrid, x, spec: P | None = None):
+    """Parallel CPU→bank scatter without the completion barrier."""
+    t0 = time.perf_counter()
+    out = grid.to_banks(x, spec)
+    return out, TransferRecord("cpu_dpu_async", _nbytes(np.asarray(x)),
+                               time.perf_counter() - t0)
+
+
+def pull_async(x):
+    """Begin an async bank→CPU copy; returns ``resolve()`` which blocks for
+    completion and yields (host_array, TransferRecord).  The record's seconds
+    measure only the blocking tail, i.e. whatever the overlap didn't hide."""
+    try:
+        x.copy_to_host_async()
+    except AttributeError:
+        pass  # non-jax arrays (already host) resolve immediately
+
+    def resolve():
+        t0 = time.perf_counter()
+        host = np.asarray(jax.device_get(x))
+        return host, TransferRecord("dpu_cpu_async", _nbytes(host),
+                                    time.perf_counter() - t0)
+    return resolve
 
 
 def pull_serial(grid: BankGrid, xs: Sequence):

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.compat import tpu_compiler_params
+
 
 def _gemv_kernel(a_ref, x_ref, o_ref, acc_ref, *, nn):
     j = pl.program_id(1)
@@ -51,7 +53,7 @@ def gemv(a, x, *, block_m: int = 128, block_n: int = 512,
         out_specs=pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, 1), a.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, 1), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(a, x2)

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.compat import tpu_compiler_params
+
 
 def _hist_kernel(x_ref, o_ref, *, nbins):
     i = pl.program_id(0)
@@ -43,7 +45,7 @@ def histogram(values, nbins: int, *, block: int = 4096,
         in_specs=[pl.BlockSpec((1, block), lambda i: (0, i))],
         out_specs=pl.BlockSpec((1, nbins), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, nbins), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(values.reshape(1, n))

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.compat import tpu_compiler_params
+
 
 def _reduce_kernel(x_ref, o_ref, acc_ref, *, nb):
     i = pl.program_id(0)
@@ -42,7 +44,7 @@ def reduce_sum(x, *, block: int = 4096, interpret: bool = False):
         out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, 1), x.dtype),
         scratch_shapes=[pltpu.VMEM((1, 1), acc_dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(x.reshape(1, n))

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.compat import tpu_compiler_params
+
 
 def _scan_kernel(x_ref, o_ref, carry_ref):
     i = pl.program_id(0)
@@ -43,7 +45,7 @@ def scan_inclusive(x, *, block: int = 4096, interpret: bool = False):
         out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((1, 1), acc_dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(x.reshape(1, n))

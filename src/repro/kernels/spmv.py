@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.compat import tpu_compiler_params
+
 
 def _spmv_kernel(vals_ref, cols_ref, x_ref, o_ref):
     vals = vals_ref[...].astype(jnp.float32)     # (br, k)
@@ -42,7 +44,7 @@ def spmv_ell(vals, cols, x, *, block_rows: int = 128,
         ],
         out_specs=pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, 1), vals.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(vals, cols, x.reshape(1, n))

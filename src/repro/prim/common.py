@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from typing import Callable
 
 import jax
 import numpy as np
@@ -78,3 +79,45 @@ def pad_chunks(x: np.ndarray, n_banks: int, fill=0) -> tuple[np.ndarray, int]:
 def sync(x):
     jax.block_until_ready(x)
     return x
+
+
+# ---------------------------------------------------------------------------
+# chunked phase interface (consumed by repro.runtime.pipeline)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChunkedWorkload:
+    """A PrIM workload factored into pipeline-composable phase callables.
+
+    ``pim()`` stays the faithful serialized baseline — a hard sync at every
+    phase boundary, whole problem at once, exactly as the UPMEM SDK forces.
+    ``chunked`` re-exposes the *same* decomposition as independent phases
+    over input chunks so the runtime pipeline can issue chunk k+1's scatter
+    while chunk k's bank-local phase is still in flight.
+
+    Contract: every chunk from ``split`` has the same shape (``split_chunks``
+    pads the tail), so one compiled bank-local phase serves all chunks of
+    all same-shaped requests.  ``scatter``/``compute`` must only *enqueue*
+    device work (no ``block_until_ready``); ``retrieve`` blocks.
+
+      split(grid, n_chunks, *args) -> (meta, [chunk, ...])    host-side
+      scatter(grid, meta, chunk)   -> device bufs             CPU→bank
+      compute(grid, meta, bufs)    -> device outs             bank-local
+      retrieve(grid, meta, outs)   -> host partial            bank→CPU
+      merge(grid, meta, parts)     -> result                  host-side
+    """
+    name: str
+    split: Callable
+    scatter: Callable
+    compute: Callable
+    retrieve: Callable
+    merge: Callable
+
+
+#: name -> ChunkedWorkload, filled by workload modules at import time.
+CHUNKED: dict[str, ChunkedWorkload] = {}
+
+
+def register_chunked(w: ChunkedWorkload) -> ChunkedWorkload:
+    CHUNKED[w.name] = w
+    return w

@@ -7,11 +7,16 @@ chunks retrieved and concatenated by the host.
 """
 from __future__ import annotations
 
-import numpy as np
+import functools
 
-from repro.core.banked import BankGrid
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import transfer as tx
+from repro.core.banked import AXIS, BankGrid
 from repro.kernels import ops
-from .common import PhaseTimer, pad_chunks, sync
+from .common import ChunkedWorkload, PhaseTimer, pad_chunks, register_chunked, sync
 
 
 def ref(a: np.ndarray, x: np.ndarray) -> np.ndarray:
@@ -30,11 +35,47 @@ def pim(grid: BankGrid, a: np.ndarray, x: np.ndarray, use_kernel: bool = False):
             return ops.gemv(ab[0], xb)[None]
         return ab @ xb
 
-    from jax.sharding import PartitionSpec as P
-    from repro.core.banked import AXIS
     f = grid.bank_local(local, in_specs=(P(AXIS), P()))
     with t.phase("dpu"):
         out = sync(f(da, dx))
     with t.phase("dpu_cpu"):
         host = grid.from_banks(out).reshape(-1)[:m]
     return host, t.times
+
+
+# -- chunked phases (pipelined runtime) --------------------------------------
+# Row chunks pipeline through the banks; the input vector is broadcast once
+# per request during split (it is a per-request constant, not a chunk).
+
+@functools.cache
+def _local(grid: BankGrid):
+    return jax.jit(grid.bank_local(lambda ab, xb: ab @ xb,
+                                   in_specs=(P(AXIS), P())))
+
+
+def _split(grid, n_chunks, a, x):
+    chunks, m = tx.split_chunks(np.asarray(a), n_chunks)
+    meta = {"m": m, "per": chunks[0].shape[0],
+            "dx": grid.broadcast(np.asarray(x))}
+    return meta, chunks
+
+
+def _scatter(grid, meta, chunk):
+    ac, _ = pad_chunks(chunk, grid.n_banks)
+    return grid.to_banks(ac)
+
+
+def _compute(grid, meta, da):
+    return _local(grid)(da, meta["dx"])
+
+
+def _retrieve(grid, meta, out):
+    return grid.from_banks(out).reshape(-1)[:meta["per"]]
+
+
+def _merge(grid, meta, parts):
+    return np.concatenate(parts)[:meta["m"]]
+
+
+chunked = register_chunked(ChunkedWorkload(
+    "GEMV", _split, _scatter, _compute, _retrieve, _merge))

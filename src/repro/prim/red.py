@@ -7,12 +7,16 @@ the beyond-paper option whose delta Fig. 14's Inter-DPU bars motivate).
 """
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import transfer as tx
 from repro.core.banked import BankGrid
 from repro.kernels import ops, ref as kref
-from .common import PhaseTimer, pad_chunks, sync
+from .common import ChunkedWorkload, PhaseTimer, pad_chunks, register_chunked, sync
 
 
 def ref(x: np.ndarray):
@@ -67,3 +71,39 @@ def pim(grid: BankGrid, x: np.ndarray, via: str = "host",
         total = grid.exchange_sum(partials, via=via)
     with t.phase("dpu_cpu"):
         return np.asarray(total).reshape(()), t.times
+
+
+# -- chunked phases (pipelined runtime) --------------------------------------
+# Each chunk yields one partial sum per bank; the final merge sums the
+# per-chunk partials on the host (the paper's "host" inter-DPU mode — the
+# chunk that is merging never stalls the chunk that is computing).
+
+@functools.cache
+def _local(grid: BankGrid):
+    return jax.jit(grid.bank_local(lambda xb: jnp.sum(xb).reshape(1)))
+
+
+def _split(grid, n_chunks, x):
+    chunks, n = tx.split_chunks(np.asarray(x), n_chunks)  # zero pad: sum-safe
+    return {"n": n}, chunks
+
+
+def _scatter(grid, meta, chunk):
+    xc, _ = pad_chunks(chunk, grid.n_banks)
+    return grid.to_banks(xc)
+
+
+def _compute(grid, meta, dx):
+    return _local(grid)(dx)
+
+
+def _retrieve(grid, meta, partials):
+    return grid.from_banks(partials)  # (banks,) per-bank partial sums
+
+
+def _merge(grid, meta, parts):
+    return np.concatenate(parts).sum()
+
+
+chunked = register_chunked(ChunkedWorkload(
+    "RED", _split, _scatter, _compute, _retrieve, _merge))

@@ -9,11 +9,15 @@ buffers — Key Obs./PR-5).
 """
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import transfer as tx
 from repro.core.banked import BankGrid
-from .common import PhaseTimer, pad_chunks, sync
+from .common import ChunkedWorkload, PhaseTimer, pad_chunks, register_chunked, sync
 
 PRED_MOD = 2   # predicate: drop x where x % 2 == 0 (paper uses a compare)
 
@@ -57,3 +61,51 @@ def pim(grid: BankGrid, x: np.ndarray):
     with t.phase("inter_dpu"):
         host = np.concatenate([bufs[i, :cnts[i]] for i in range(n_banks)])
     return host, t.times
+
+
+# -- chunked phases (pipelined runtime) --------------------------------------
+# Compacted chunk outputs stay ragged per bank, so each chunk carries its
+# valid length and the retrieve trims per bank exactly like pim()'s serial
+# path — but chunk k's ragged host merge overlaps chunk k+1's compute.
+
+@functools.cache
+def _local(grid: BankGrid):
+    def local(xb, lb):
+        out, count = _local_compact(xb[0], lb[0])
+        return out[None], count[None]
+    return jax.jit(grid.bank_local(local))
+
+
+def _split(grid, n_chunks, x):
+    chunks, n = tx.split_chunks(np.asarray(x), n_chunks)
+    per = chunks[0].shape[0]
+    valid = [min(per, max(0, n - i * per)) for i in range(len(chunks))]
+    return {"n": n}, list(zip(chunks, valid))
+
+
+def _scatter(grid, meta, chunk):
+    x, valid = chunk
+    xc, _ = pad_chunks(x, grid.n_banks)
+    per = xc.shape[1]
+    lens = np.clip(valid - per * np.arange(grid.n_banks), 0, per) \
+        .astype(np.int32)
+    return grid.to_banks(xc), grid.to_banks(lens)
+
+
+def _compute(grid, meta, bufs):
+    return _local(grid)(*bufs)
+
+
+def _retrieve(grid, meta, outs):
+    buf, counts = outs
+    bufs = grid.from_banks(buf)
+    cnts = grid.from_banks(counts).reshape(-1)
+    return np.concatenate([bufs[i, :cnts[i]] for i in range(grid.n_banks)])
+
+
+def _merge(grid, meta, parts):
+    return np.concatenate(parts)
+
+
+chunked = register_chunked(ChunkedWorkload(
+    "SEL", _split, _scatter, _compute, _retrieve, _merge))

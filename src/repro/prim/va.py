@@ -7,11 +7,15 @@ No inter-DPU phase.
 """
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import transfer as tx
 from repro.core.banked import BankGrid
-from .common import PhaseTimer, pad_chunks, sync
+from .common import ChunkedWorkload, PhaseTimer, pad_chunks, register_chunked, sync
 
 
 def ref(a: np.ndarray, b: np.ndarray) -> np.ndarray:
@@ -31,3 +35,39 @@ def pim(grid: BankGrid, a: np.ndarray, b: np.ndarray):
     with t.phase("dpu_cpu"):
         host = grid.from_banks(out).reshape(-1)[:n]
     return host, t.times
+
+
+# -- chunked phases (pipelined runtime) --------------------------------------
+
+@functools.cache
+def _local(grid: BankGrid):
+    return jax.jit(grid.bank_local(lambda x, y: x + y, in_specs=None))
+
+
+def _split(grid, n_chunks, a, b):
+    ac, n = tx.split_chunks(np.asarray(a), n_chunks)
+    bc, _ = tx.split_chunks(np.asarray(b), n_chunks)
+    return {"n": n, "per": ac[0].shape[0]}, list(zip(ac, bc))
+
+
+def _scatter(grid, meta, chunk):
+    a, b = chunk
+    ac, _ = pad_chunks(a, grid.n_banks)
+    bc, _ = pad_chunks(b, grid.n_banks)
+    return grid.to_banks(ac), grid.to_banks(bc)
+
+
+def _compute(grid, meta, bufs):
+    return _local(grid)(*bufs)
+
+
+def _retrieve(grid, meta, out):
+    return grid.from_banks(out).reshape(-1)[:meta["per"]]
+
+
+def _merge(grid, meta, parts):
+    return np.concatenate(parts)[:meta["n"]]
+
+
+chunked = register_chunked(ChunkedWorkload(
+    "VA", _split, _scatter, _compute, _retrieve, _merge))

@@ -1,4 +1,9 @@
 from .elastic import carve_mesh, reshard, shardings_for, simulate_failure
+from .pipeline import PipelineResult, run_pipelined, run_pipelined_many
+from .scheduler import PimRequest, PimScheduler
 from .straggler import StepMonitor, StragglerConfig, Watchdog
+from .telemetry import RequestRecord, Telemetry
 __all__ = ["carve_mesh", "reshard", "shardings_for", "simulate_failure",
-           "StepMonitor", "StragglerConfig", "Watchdog"]
+           "StepMonitor", "StragglerConfig", "Watchdog",
+           "PipelineResult", "run_pipelined", "run_pipelined_many",
+           "PimRequest", "PimScheduler", "RequestRecord", "Telemetry"]

@@ -1,0 +1,151 @@
+"""Double-buffered chunk pipeline over a BankGrid.
+
+The UPMEM SDK (and the faithful ``prim.*.pim()`` baselines) serialize the
+three phases of every workload invocation:
+
+    scatter | compute | retrieve | scatter | compute | retrieve | ...
+
+Nothing in JAX forces that: ``device_put`` and bank-local phases are enqueued
+asynchronously, so chunk k+1's CPU→bank scatter can be issued while chunk k's
+bank-local phase is still in flight, and chunk k-1's bank→CPU copy drains
+meanwhile (``copy_to_host_async``).  The steady state is the classic
+three-stage software pipeline:
+
+    scatter k+1  ─┐
+    compute k     ├─ concurrent
+    retrieve k-1 ─┘
+
+``run_pipelined_many`` generalizes to a *stream* of same-workload requests:
+their chunks flow through one pipeline back-to-back, so the banks never
+drain between requests — that is the scheduler's batching payoff.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import TYPE_CHECKING, Any, Sequence
+
+import jax
+
+from repro.core.banked import BankGrid
+
+from .telemetry import RequestRecord, _phases
+
+if TYPE_CHECKING:  # annotation-only: importing repro.prim pulls the suite
+    from repro.prim.common import ChunkedWorkload, PhaseTimes
+
+
+@dataclasses.dataclass
+class PipelineResult:
+    value: Any
+    makespan: float
+    phases: PhaseTimes      # host-observed buckets (see telemetry docstring)
+    n_chunks: int
+
+
+def _host_prefetch(outs) -> None:
+    """Start async device→host copies for every array in ``outs``."""
+    for leaf in jax.tree_util.tree_leaves(outs):
+        try:
+            leaf.copy_to_host_async()
+        except AttributeError:
+            pass
+
+
+class _Buckets:
+    """Accumulate host wall time into PhaseTimes buckets."""
+
+    def __init__(self):
+        self.times = _phases()
+
+    def add(self, phase: str, t0: float) -> float:
+        t1 = time.perf_counter()
+        setattr(self.times, phase, getattr(self.times, phase) + (t1 - t0))
+        return t1
+
+
+def run_pipelined(grid: BankGrid, workload: ChunkedWorkload, *args,
+                  n_chunks: int = 4,
+                  record: RequestRecord | None = None) -> PipelineResult:
+    """Run one request through the chunk pipeline; returns PipelineResult."""
+    records = [record] if record is not None else None
+    results, makespans, phases = run_pipelined_many(
+        grid, workload, [args], n_chunks=n_chunks, records=records,
+        _full=True)
+    return PipelineResult(results[0], makespans[0], phases[0], n_chunks)
+
+
+def run_pipelined_many(grid: BankGrid, workload: ChunkedWorkload,
+                       requests: Sequence[tuple], n_chunks: int = 4,
+                       records: Sequence[RequestRecord] | None = None,
+                       _full: bool = False):
+    """Stream every request's chunks through one double-buffered pipeline.
+
+    ``requests`` is a sequence of argument tuples for ``workload``.  Returns
+    the list of results (plus per-request makespans and phase buckets when
+    ``_full``).  Requests complete in submission order; a request's result is
+    merged as soon as its last chunk retires, while later requests' chunks
+    are already in flight.
+    """
+    n_req = len(requests)
+    metas: list = [None] * n_req
+    flat: list = []                       # (req_idx, chunk)
+    bucket = [_Buckets() for _ in range(n_req)]
+    t_start = [0.0] * n_req
+    t_done = [0.0] * n_req
+    parts: list = [[] for _ in range(n_req)]
+    chunk_count = [0] * n_req
+    results: list = [None] * n_req
+
+    t0 = time.perf_counter()
+    for i, args in enumerate(requests):
+        metas[i], chunks = workload.split(grid, n_chunks, *args)
+        chunk_count[i] = len(chunks)
+        flat.extend((i, c) for c in chunks)
+        if records is not None:
+            records[i].n_chunks = len(chunks)
+
+    def scatter(k):
+        i, chunk = flat[k]
+        if not t_start[i]:
+            t_start[i] = time.perf_counter()
+        ts = time.perf_counter()
+        bufs = workload.scatter(grid, metas[i], chunk)
+        bucket[i].add("cpu_dpu", ts)
+        return bufs
+
+    def retire(entry):
+        """Block for one in-flight chunk and fold it into its request."""
+        i, outs = entry
+        ts = time.perf_counter()
+        parts[i].append(workload.retrieve(grid, metas[i], outs))
+        ts = bucket[i].add("dpu_cpu", ts)
+        if len(parts[i]) == chunk_count[i]:
+            results[i] = workload.merge(grid, metas[i], parts[i])
+            t_done[i] = bucket[i].add("inter_dpu", ts)
+
+    in_flight: list = []
+    bufs = scatter(0) if flat else None
+    for k in range(len(flat)):
+        i, _ = flat[k]
+        ts = time.perf_counter()
+        outs = workload.compute(grid, metas[i], bufs)
+        bucket[i].add("dpu", ts)
+        if k + 1 < len(flat):
+            bufs = scatter(k + 1)        # overlaps compute of chunk k
+        _host_prefetch(outs)             # start draining chunk k early
+        in_flight.append((i, outs))
+        if len(in_flight) > 1:           # retire k-1 while k computes
+            retire(in_flight.pop(0))
+    while in_flight:
+        retire(in_flight.pop(0))
+
+    makespans = [t_done[i] - (t_start[i] or t0) for i in range(n_req)]
+    if records is not None:
+        for i, rec in enumerate(records):
+            rec.t_start = t_start[i] or t0
+            rec.t_finish = t_done[i]
+            rec.phases = bucket[i].times
+    if _full:
+        return results, makespans, [b.times for b in bucket]
+    return results

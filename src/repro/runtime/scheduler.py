@@ -1,0 +1,224 @@
+"""Request scheduler: multiplex concurrent PrIM workloads onto one BankGrid.
+
+Callers ``submit()`` workload invocations as *requests*; the scheduler owns
+the grid and decides execution order:
+
+* **priority** — higher-priority requests run first;
+* **FIFO** — ties break by submission order;
+* **size-aware batching** — consecutive queued requests of the *same*
+  workload are coalesced (up to ``max_batch_requests`` / ``max_batch_bytes``)
+  and streamed through a single chunk pipeline, so the banks never drain
+  between them (``pipeline.run_pipelined_many``).
+
+Two execution modes:
+
+* ``drain()`` — process the queue in the calling thread (deterministic;
+  what the tests and benchmarks use);
+* ``start()`` / ``stop()`` or ``with scheduler:`` — a worker thread serves
+  requests as they arrive (what ``examples/serve_prim.py`` uses).  All JAX
+  dispatch stays on the single worker thread.
+
+Every request carries a :class:`~repro.runtime.telemetry.RequestRecord`;
+completed records land in the scheduler's :class:`Telemetry` sink.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+from typing import TYPE_CHECKING, Any, Sequence
+
+import numpy as np
+
+from repro.core.banked import BankGrid
+
+from .pipeline import run_pipelined_many
+from .telemetry import RequestRecord, Telemetry, now
+
+if TYPE_CHECKING:  # annotation-only: importing repro.prim pulls the suite
+    from repro.prim import common
+
+
+def _nbytes(args) -> int:
+    return sum(a.nbytes for a in args if isinstance(a, np.ndarray))
+
+
+def _nitems(args) -> int:
+    for a in args:
+        if isinstance(a, np.ndarray):
+            return a.shape[0]
+    return 0
+
+
+class PimRequest:
+    """Handle returned by ``submit()``; ``result()`` blocks for completion."""
+
+    def __init__(self, workload: str, args: tuple, priority: int,
+                 record: RequestRecord):
+        self.workload = workload
+        self.args = args
+        self.priority = priority
+        self.record = record
+        self._event = threading.Event()
+        self._result: Any = None
+        self._error: BaseException | None = None
+
+    def _fulfill(self, result=None, error=None) -> None:
+        self._result, self._error = result, error
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.record.request_id} "
+                               f"({self.workload}) still queued")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+
+class PimScheduler:
+    """Owns a BankGrid; queues, batches, and pipelines PrIM requests."""
+
+    def __init__(self, grid: BankGrid, *, n_chunks: int = 4,
+                 max_batch_requests: int = 8,
+                 max_batch_bytes: int = 256 << 20,
+                 workloads: dict[str, common.ChunkedWorkload] | None = None,
+                 telemetry: Telemetry | None = None):
+        self.grid = grid
+        self.n_chunks = n_chunks
+        self.max_batch_requests = max_batch_requests
+        self.max_batch_bytes = max_batch_bytes
+        if workloads is None:
+            from repro.prim import common   # lazy: pulls the whole suite
+            workloads = common.CHUNKED
+        self.workloads = dict(workloads)
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._queue: list = []                  # heap of (-prio, seq, req)
+        self._seq = itertools.count()
+        self._batch_seq = itertools.count()
+        self._cv = threading.Condition()
+        self._thread: threading.Thread | None = None
+        self._stopping = False
+
+    # -- submission -----------------------------------------------------------
+
+    def submit(self, workload: str, *args, priority: int = 0) -> PimRequest:
+        """Enqueue one workload invocation; returns a waitable handle."""
+        if workload not in self.workloads:
+            raise KeyError(f"unknown workload {workload!r}; have "
+                           f"{sorted(self.workloads)}")
+        seq = next(self._seq)
+        rec = RequestRecord(request_id=seq, workload=workload,
+                            n_items=_nitems(args), bytes_in=_nbytes(args),
+                            priority=priority, t_submit=now())
+        req = PimRequest(workload, args, priority, rec)
+        with self._cv:
+            heapq.heappush(self._queue, (-priority, seq, req))
+            self._cv.notify()
+        return req
+
+    def pending(self) -> int:
+        with self._cv:
+            return len(self._queue)
+
+    # -- scheduling policy ----------------------------------------------------
+
+    def _pop_batch(self) -> list[PimRequest]:
+        """Pop the head request plus *consecutive* same-workload requests
+        that fit the batch limits.  Coalescing stops at the first entry that
+        doesn't match or fit — skipping past it would execute a lower-ranked
+        request ahead of it, violating the priority/FIFO guarantee."""
+        order = sorted(self._queue)            # priority/FIFO order
+        head = order[0][2]
+        batch, nbytes = [head], head.record.bytes_in
+        for entry in order[1:]:
+            req = entry[2]
+            if (req.workload != head.workload
+                    or len(batch) >= self.max_batch_requests
+                    or nbytes + req.record.bytes_in > self.max_batch_bytes):
+                break
+            batch.append(req)
+            nbytes += req.record.bytes_in
+        self._queue = order[len(batch):]
+        heapq.heapify(self._queue)
+        return batch
+
+    # -- execution ------------------------------------------------------------
+
+    def _run_batch(self, batch: Sequence[PimRequest]) -> None:
+        bid = next(self._batch_seq)
+        records = [r.record for r in batch]
+        for rec in records:
+            rec.batch_id = bid
+        try:
+            results = run_pipelined_many(
+                self.grid, self.workloads[batch[0].workload],
+                [r.args for r in batch], n_chunks=self.n_chunks,
+                records=records)
+        except BaseException as e:                # noqa: BLE001 — forwarded
+            if len(batch) == 1:
+                batch[0]._fulfill(error=e)
+            else:
+                # isolate the failure: a malformed request must not poison
+                # the healthy requests coalesced into its batch
+                for r in batch:
+                    self._run_batch([r])
+            return
+        for req, rec, res in zip(batch, records, results):
+            rec.bytes_out = res.nbytes if isinstance(res, np.ndarray) else 0
+            self.telemetry.record(rec)
+            req._fulfill(result=res)
+
+    def drain(self) -> int:
+        """Process queued requests in the calling thread until empty.
+        Returns the number of requests completed."""
+        done = 0
+        while True:
+            with self._cv:
+                if not self._queue:
+                    return done
+                batch = self._pop_batch()
+            self._run_batch(batch)
+            done += len(batch)
+
+    # -- serving mode ---------------------------------------------------------
+
+    def start(self) -> "PimScheduler":
+        """Serve requests from a worker thread until ``stop()``."""
+        if self._thread is not None:
+            raise RuntimeError("scheduler already started")
+        self._stopping = False
+
+        def loop():
+            while True:
+                with self._cv:
+                    while not self._queue and not self._stopping:
+                        self._cv.wait()
+                    if self._stopping and not self._queue:
+                        return
+                    batch = self._pop_batch()
+                self._run_batch(batch)
+
+        self._thread = threading.Thread(target=loop, name="pim-scheduler",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Finish everything queued, then stop the worker thread."""
+        if self._thread is None:
+            return
+        with self._cv:
+            self._stopping = True
+            self._cv.notify_all()
+        self._thread.join()
+        self._thread = None
+
+    def __enter__(self) -> "PimScheduler":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

@@ -1,4 +1,8 @@
 """Hypothesis property tests on system invariants."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st

@@ -1,0 +1,112 @@
+"""core/transfer.py: layout round-trips, record edge cases, and the
+chunked/async variants the pipelined runtime builds on."""
+import numpy as np
+import pytest
+
+from repro.core import make_bank_grid
+from repro.core.transfer import (TransferRecord, from_banked, pull_async,
+                                 pull_parallel, push_parallel,
+                                 push_parallel_async, split_chunks, to_banked)
+
+
+@pytest.fixture(scope="module")
+def grid():
+    return make_bank_grid()
+
+
+# -- to_banked / from_banked round-trips -------------------------------------
+
+@pytest.mark.parametrize("n", [1, 7, 16, 1003])
+@pytest.mark.parametrize("n_banks", [1, 3, 8])
+def test_roundtrip_non_divisible(rng, n, n_banks):
+    x = rng.normal(size=n).astype(np.float32)
+    banked, orig = to_banked(x, n_banks)
+    assert banked.shape[0] == n_banks
+    assert orig == n
+    np.testing.assert_array_equal(from_banked(banked, orig), x)
+
+
+@pytest.mark.parametrize("axis", [0, 1, 2])
+def test_roundtrip_nonzero_axis(rng, axis):
+    x = rng.normal(size=(5, 9, 13)).astype(np.float32)
+    banked, orig = to_banked(x, 4, axis=axis)
+    assert banked.shape[0] == 4
+    assert orig == x.shape[axis]
+    np.testing.assert_array_equal(from_banked(banked, orig, axis=axis), x)
+
+
+def test_roundtrip_axis1_values(rng):
+    """Bank-major relayout along axis 1 keeps row contents aligned."""
+    x = np.arange(24, dtype=np.int32).reshape(4, 6)
+    banked, orig = to_banked(x, 3, axis=1)
+    # bank b owns columns [2b, 2b+2)
+    for b in range(3):
+        np.testing.assert_array_equal(banked[b], x[:, 2 * b:2 * b + 2])
+    np.testing.assert_array_equal(from_banked(banked, orig, axis=1), x)
+
+
+# -- TransferRecord edge cases ------------------------------------------------
+
+def test_bandwidth_zero_seconds():
+    rec = TransferRecord("cpu_dpu_parallel", nbytes=1024, seconds=0.0)
+    assert rec.bandwidth == float("inf")
+
+
+def test_bandwidth_normal():
+    rec = TransferRecord("cpu_dpu_parallel", nbytes=1000, seconds=0.5)
+    assert rec.bandwidth == 2000.0
+
+
+# -- split_chunks -------------------------------------------------------------
+
+@pytest.mark.parametrize("n,n_chunks", [(10, 3), (8, 4), (1, 2), (1003, 7)])
+def test_split_chunks_equal_shapes(rng, n, n_chunks):
+    x = rng.integers(0, 100, n).astype(np.int32)
+    chunks, orig = split_chunks(x, n_chunks)
+    assert orig == n
+    assert len(chunks) == n_chunks
+    assert len({c.shape for c in chunks}) == 1   # identical shapes
+    np.testing.assert_array_equal(np.concatenate(chunks)[:n], x)
+
+
+def test_split_chunks_axis1(rng):
+    x = rng.normal(size=(3, 10)).astype(np.float32)
+    chunks, orig = split_chunks(x, 4, axis=1)
+    assert all(c.shape == (3, 3) for c in chunks)
+    np.testing.assert_array_equal(np.concatenate(chunks, axis=1)[:, :10], x)
+
+
+def test_split_chunks_invalid():
+    with pytest.raises(ValueError):
+        split_chunks(np.arange(4), 0)
+
+
+# -- async variants -----------------------------------------------------------
+
+def test_push_async_matches_sync(grid, rng):
+    x = rng.normal(size=(grid.n_banks, 16)).astype(np.float32)
+    sync_out, sync_rec = push_parallel(grid, x)
+    async_out, async_rec = push_parallel_async(grid, x)
+    np.testing.assert_array_equal(np.asarray(async_out), np.asarray(sync_out))
+    assert async_rec.kind == "cpu_dpu_async"
+    assert async_rec.nbytes == sync_rec.nbytes == x.nbytes
+
+
+def test_pull_async_roundtrip(grid, rng):
+    x = rng.normal(size=(grid.n_banks, 32)).astype(np.float32)
+    dev, _ = push_parallel_async(grid, x)
+    resolve = pull_async(dev)
+    host, rec = resolve()
+    np.testing.assert_array_equal(host, x)
+    assert rec.kind == "dpu_cpu_async"
+    assert rec.nbytes == x.nbytes
+    # matches the synchronous pull
+    host2, _ = pull_parallel(grid, dev)
+    np.testing.assert_array_equal(host, host2)
+
+
+def test_pull_async_on_host_array(rng):
+    """Non-device arrays resolve immediately (pure-host fallback)."""
+    x = rng.normal(size=8).astype(np.float32)
+    host, rec = pull_async(x)()
+    np.testing.assert_array_equal(host, x)
