@@ -10,57 +10,21 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro import prim
 from repro.core import make_bank_grid
+from repro.prim.registry import REGISTRY
 
 
 def _workloads(scale: int):
+    """label -> (grid -> (result, PhaseTimes)), straight from the registry:
+    every entry's canonical args, every serialized variant (HST-S/HST-L,
+    SCAN-SSA/SCAN-RSS, ...) — nothing hand-maintained."""
     rng = np.random.default_rng(0)
-    n = 100_000 * scale
-    adj = prim.bfs.random_graph(2000 * scale, 4)
-    ip, ix, dv = prim.spmv.random_csr(1000 * scale, 512, 8)
-    vals, cols = prim.spmv.csr_to_ell(ip, ix, dv, 1000 * scale)
-    A = rng.normal(size=(256 * scale, 512)).astype(np.float32)
-    return {
-        "VA": lambda g: prim.va.pim(g, rng.integers(0, 99, n).astype(np.int32),
-                                    rng.integers(0, 99, n).astype(np.int32)),
-        "GEMV": lambda g: prim.gemv.pim(g, A, rng.normal(size=512)
-                                        .astype(np.float32)),
-        "SpMV": lambda g: prim.spmv.pim(g, vals, cols, rng.normal(size=512)
-                                        .astype(np.float32)),
-        "SEL": lambda g: prim.sel.pim(g, rng.integers(0, 99, n)
-                                      .astype(np.int32)),
-        "UNI": lambda g: prim.uni.pim(g, np.sort(rng.integers(0, 99, n))
-                                      .astype(np.int32)),
-        "BS": lambda g: prim.bs.pim(
-            g, np.sort(rng.integers(0, 1 << 20, 1 << 16)).astype(np.int32),
-            rng.integers(0, 1 << 20, 4096 * scale).astype(np.int32)),
-        "TS": lambda g: prim.ts.pim(g, rng.normal(size=8192 * scale)
-                                    .astype(np.float32),
-                                    rng.normal(size=64).astype(np.float32)),
-        "BFS": lambda g: prim.bfs.pim(g, adj, 0),
-        "MLP": lambda g: prim.mlp.pim(
-            g, [rng.normal(size=(256, 512)).astype(np.float32),
-                rng.normal(size=(128, 256)).astype(np.float32)],
-            rng.normal(size=512).astype(np.float32)),
-        "NW": lambda g: prim.nw.pim(g, rng.integers(0, 4, 64 * scale)
-                                    .astype(np.int32),
-                                    rng.integers(0, 4, 64 * scale)
-                                    .astype(np.int32), block=32),
-        "HST-S": lambda g: prim.hist.pim_short(
-            g, rng.integers(0, 256, n).astype(np.int32)),
-        "HST-L": lambda g: prim.hist.pim_long(
-            g, rng.integers(0, 256, n).astype(np.int32)),
-        "RED": lambda g: prim.red.pim(g, rng.integers(0, 99, n)
-                                      .astype(np.int32)),
-        "SCAN-SSA": lambda g: prim.scan.pim_ssa(g, rng.integers(0, 9, n)
-                                                .astype(np.int32)),
-        "SCAN-RSS": lambda g: prim.scan.pim_rss(g, rng.integers(0, 9, n)
-                                                .astype(np.int32)),
-        "TRNS": lambda g: prim.trns.pim(
-            g, rng.normal(size=(512, 64 * scale)).astype(np.float32),
-            m=8, n=8),
-    }
+    runs = {}
+    for entry in REGISTRY.values():
+        args = entry.make_args(rng, scale)
+        for label, fn in entry.run_variants().items():
+            runs[label] = (lambda g, fn=fn, args=args: fn(g, *args))
+    return runs
 
 
 def strong_scaling(bank_counts=(1,)):

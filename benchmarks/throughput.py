@@ -1,5 +1,5 @@
 """Runtime throughput: serialized ``pim()`` baseline vs the pipelined
-scheduler (requests/sec and overlap speedup), per workload and bank count.
+scheduler (requests/sec and overlap speedup), for the FULL registry.
 
 The serialized column reproduces the paper's execution model — every request
 runs scatter | compute | retrieve with hard syncs, one after another.  The
@@ -7,6 +7,11 @@ pipelined column submits the same requests to ``PimScheduler``, which chunks,
 double-buffers, and batches them (``runtime/pipeline.py``).  The ratio is the
 transfer time the UPMEM SDK's serialization leaves on the table (§5 stacked
 bars; arXiv:2110.01709 makes the same argument).
+
+Workloads, argument generators, and result checks all come from
+``repro.prim.registry``.  Serialized-only workloads (NW, BFS) are not
+skipped: they get a row with ``pipelineable=no`` and the registry's reason,
+so the table always covers the whole suite.
 
     PYTHONPATH=src python -m benchmarks.throughput --banks 8
 """
@@ -24,48 +29,46 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
 import numpy as np
 
 
-def _request_args(workload: str, rng, scale: int = 1):
-    n = (1 << 20) * scale
-    if workload == "VA":
-        return (rng.integers(0, 99, n).astype(np.int32),
-                rng.integers(0, 99, n).astype(np.int32))
-    if workload == "GEMV":
-        return (rng.normal(size=(2048 * scale, 512)).astype(np.float32),
-                rng.normal(size=512).astype(np.float32))
-    if workload == "RED":
-        return (rng.integers(0, 99, n).astype(np.int32),)
-    if workload == "SEL":
-        return (rng.integers(0, 999, n).astype(np.int32),)
-    raise ValueError(workload)
-
-
-def throughput(workloads=("VA", "GEMV", "RED", "SEL"), n_requests: int = 8,
-               n_chunks: int = 4, scale: int = 1, check: bool = True):
-    from repro import prim
+def throughput(workloads=None, n_requests: int = 6, n_chunks: int = 4,
+               scale: int = 2, check: bool = True):
+    from repro.prim.registry import REGISTRY
     from repro.core import make_bank_grid
     from repro.runtime import PimScheduler, run_pipelined
 
     grid = make_bank_grid()
-    mods = {"VA": prim.va, "GEMV": prim.gemv, "RED": prim.red,
-            "SEL": prim.sel}
+    entries = [REGISTRY[name] for name in (workloads or REGISTRY)]
     rng = np.random.default_rng(0)
     rows = []
-    for name in workloads:
-        args_list = [_request_args(name, rng, scale)
-                     for _ in range(n_requests)]
+    for e in entries:
+        args_list = [e.make_args(rng, scale) for _ in range(n_requests)]
 
         # warm both paths so neither column pays first-compile time
-        mods[name].pim(grid, *args_list[0])
-        run_pipelined(grid, prim.common.CHUNKED[name], *args_list[0],
-                      n_chunks=n_chunks)
+        e.pim(grid, *args_list[0])
+        if e.pipelineable:
+            run_pipelined(grid, e.chunked, *args_list[0], n_chunks=n_chunks)
 
         t0 = time.perf_counter()
-        serial_out = [mods[name].pim(grid, *args)[0] for args in args_list]
+        serial_out = [e.pim(grid, *args)[0] for args in args_list]
         serialized_s = time.perf_counter() - t0
+
+        row = {"table": "runtime_throughput", "workload": e.name,
+               "banks": grid.n_banks, "requests": n_requests,
+               "chunks": n_chunks,
+               "pipelineable": "yes" if e.pipelineable else "no",
+               "serialized_s": serialized_s,
+               "serialized_rps": n_requests / serialized_s,
+               "pipelined_s": "", "pipelined_rps": "",
+               "overlap_speedup": "", "mean_queue_wait_s": "",
+               "aggregate_gbps": "", "note": ""}
+
+        if not e.pipelineable:
+            row["note"] = f"serialized-only: {e.reason}"
+            rows.append(row)
+            continue
 
         sched = PimScheduler(grid, n_chunks=n_chunks)
         t0 = time.perf_counter()
-        reqs = [sched.submit(name, *args) for args in args_list]
+        reqs = [sched.submit(e.name, *args) for args in args_list]
         sched.drain()
         pipe_out = [r.result() for r in reqs]
         pipelined_s = time.perf_counter() - t0
@@ -74,21 +77,17 @@ def throughput(workloads=("VA", "GEMV", "RED", "SEL"), n_requests: int = 8,
 
         if check:
             for s, p in zip(serial_out, pipe_out):
-                np.testing.assert_allclose(np.asarray(p), np.asarray(s),
-                                           rtol=1e-4, atol=1e-4)
+                e.compare(p, s)
 
         agg = sched.telemetry.aggregate()
-        rows.append({
-            "table": "runtime_throughput", "workload": name,
-            "banks": grid.n_banks, "requests": n_requests,
-            "chunks": n_chunks,
-            "serialized_s": serialized_s, "pipelined_s": pipelined_s,
-            "overlap_speedup": serialized_s / pipelined_s,
-            "serialized_rps": n_requests / serialized_s,
+        row.update({
+            "pipelined_s": pipelined_s,
             "pipelined_rps": n_requests / pipelined_s,
+            "overlap_speedup": serialized_s / pipelined_s,
             "mean_queue_wait_s": agg["mean_queue_wait_s"],
             "aggregate_gbps": agg["aggregate_gbps"],
         })
+        rows.append(row)
     return rows
 
 
@@ -96,20 +95,24 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--banks", type=int, default=0,
                     help="re-exec with N forced host devices")
-    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--chunks", type=int, default=4)
-    ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--scale", type=int, default=2)
+    ap.add_argument("--workloads", nargs="*", default=None,
+                    help="subset of registry names (default: full registry)")
     args = ap.parse_args()
     if args.banks:
         env = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_"
                                          f"count={args.banks}")
-        raise SystemExit(subprocess.call(
-            [sys.executable, "-m", "benchmarks.throughput",
-             "--requests", str(args.requests), "--chunks", str(args.chunks),
-             "--scale", str(args.scale)], env=env))
+        cmd = [sys.executable, "-m", "benchmarks.throughput",
+               "--requests", str(args.requests), "--chunks", str(args.chunks),
+               "--scale", str(args.scale)]
+        if args.workloads:
+            cmd += ["--workloads", *args.workloads]
+        raise SystemExit(subprocess.call(cmd, env=env))
     from benchmarks.run import emit
-    emit(throughput(n_requests=args.requests, n_chunks=args.chunks,
-                    scale=args.scale))
+    emit(throughput(workloads=args.workloads, n_requests=args.requests,
+                    n_chunks=args.chunks, scale=args.scale))
 
 
 if __name__ == "__main__":

@@ -1,5 +1,9 @@
 """Run the full 16-workload PrIM suite with the paper's phase breakdown.
 
+Workloads, variants, and argument generation come straight from
+``repro.prim.registry`` (HST-S/HST-L and SCAN-SSA/SCAN-RSS are variant
+entries of their modules, hence 16 rows from 14 modules).
+
     PYTHONPATH=src python examples/prim_suite.py
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/prim_suite.py     # 8-bank grid
@@ -11,67 +15,22 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro import prim
 from repro.core import make_bank_grid
+from repro.prim.registry import REGISTRY
 
 
 def main():
     g = make_bank_grid()
     rng = np.random.default_rng(0)
-    n = 1 << 18
-
-    ip, ix, dv = prim.spmv.random_csr(2000, 512, 8)
-    vals, cols = prim.spmv.csr_to_ell(ip, ix, dv, 2000)
-    adj = prim.bfs.random_graph(2000, 4)
-
-    runs = [
-        ("VA", lambda: prim.va.pim(g, rng.integers(0, 99, n).astype(np.int32),
-                                   rng.integers(0, 99, n).astype(np.int32))),
-        ("GEMV", lambda: prim.gemv.pim(
-            g, rng.normal(size=(1024, 512)).astype(np.float32),
-            rng.normal(size=512).astype(np.float32))),
-        ("SpMV", lambda: prim.spmv.pim(g, vals, cols,
-                                       rng.normal(size=512)
-                                       .astype(np.float32))),
-        ("SEL", lambda: prim.sel.pim(g, rng.integers(0, 99, n)
-                                     .astype(np.int32))),
-        ("UNI", lambda: prim.uni.pim(g, np.sort(rng.integers(0, 99, n))
-                                     .astype(np.int32))),
-        ("BS", lambda: prim.bs.pim(
-            g, np.sort(rng.integers(0, 1 << 20, 1 << 16)).astype(np.int32),
-            rng.integers(0, 1 << 20, 8192).astype(np.int32))),
-        ("TS", lambda: prim.ts.pim(g, rng.normal(size=16384)
-                                   .astype(np.float32),
-                                   rng.normal(size=64).astype(np.float32))),
-        ("BFS", lambda: prim.bfs.pim(g, adj, 0)),
-        ("MLP", lambda: prim.mlp.pim(
-            g, [rng.normal(size=(256, 512)).astype(np.float32),
-                rng.normal(size=(64, 256)).astype(np.float32)],
-            rng.normal(size=512).astype(np.float32))),
-        ("NW", lambda: prim.nw.pim(g, rng.integers(0, 4, 128)
-                                   .astype(np.int32),
-                                   rng.integers(0, 4, 128).astype(np.int32),
-                                   block=32)),
-        ("HST-S", lambda: prim.hist.pim_short(
-            g, rng.integers(0, 256, n).astype(np.int32))),
-        ("HST-L", lambda: prim.hist.pim_long(
-            g, rng.integers(0, 256, n).astype(np.int32))),
-        ("RED", lambda: prim.red.pim(g, rng.integers(0, 99, n)
-                                     .astype(np.int32))),
-        ("SCAN-SSA", lambda: prim.scan.pim_ssa(g, rng.integers(0, 9, n)
-                                               .astype(np.int32))),
-        ("SCAN-RSS", lambda: prim.scan.pim_rss(g, rng.integers(0, 9, n)
-                                               .astype(np.int32))),
-        ("TRNS", lambda: prim.trns.pim(
-            g, rng.normal(size=(512, 256)).astype(np.float32), m=8, n=8)),
-    ]
     print(f"{'bench':10s} {'cpu_dpu':>9s} {'dpu':>9s} {'inter':>9s} "
           f"{'dpu_cpu':>9s} {'total':>9s}   ({g.n_banks} banks)")
-    for name, fn in runs:
-        _, t = fn()
-        print(f"{name:10s} {t.cpu_dpu*1e3:8.2f}m {t.dpu*1e3:8.2f}m "
-              f"{t.inter_dpu*1e3:8.2f}m {t.dpu_cpu*1e3:8.2f}m "
-              f"{t.total*1e3:8.2f}m")
+    for entry in REGISTRY.values():
+        args = entry.make_args(rng, scale=4)
+        for label, fn in entry.run_variants().items():
+            _, t = fn(g, *args)
+            print(f"{label:10s} {t.cpu_dpu*1e3:8.2f}m {t.dpu*1e3:8.2f}m "
+                  f"{t.inter_dpu*1e3:8.2f}m {t.dpu_cpu*1e3:8.2f}m "
+                  f"{t.total*1e3:8.2f}m")
 
 
 if __name__ == "__main__":

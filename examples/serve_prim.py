@@ -1,10 +1,12 @@
 """Sustained multi-request PrIM serving on the pipelined runtime.
 
-A worker thread owns the BankGrid; producers submit a mixed stream of VA /
-GEMV / RED / SEL requests with priorities while earlier requests are still
-in flight.  The scheduler batches same-workload requests, pipelines their
-chunks (scatter k+1 overlapping compute k), and every result is checked
-against the workload's gold ``ref()``.
+A worker thread owns the BankGrid; producers submit a mixed stream of
+requests drawn from the FULL workload registry with priorities while earlier
+requests are still in flight.  The scheduler batches same-workload requests,
+pipelines their chunks (scatter k+1 overlapping compute k), and falls back
+to the serialized ``pim()`` for the registry's serialized-only workloads
+(NW, BFS — see their registry reasons).  Every result is checked against the
+workload's gold ``ref()`` with the registry's comparator.
 
     PYTHONPATH=src python examples/serve_prim.py
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -17,46 +19,30 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro import prim
 from repro.core import make_bank_grid
+from repro.prim.registry import REGISTRY, SERIALIZED_ONLY
 from repro.runtime import PimScheduler
-
-
-def make_request(name: str, rng):
-    n = 1 << 18
-    if name == "VA":
-        args = (rng.integers(0, 99, n).astype(np.int32),
-                rng.integers(0, 99, n).astype(np.int32))
-        return args, prim.va.ref(*args)
-    if name == "GEMV":
-        args = (rng.normal(size=(512, 256)).astype(np.float32),
-                rng.normal(size=256).astype(np.float32))
-        return args, prim.gemv.ref(*args)
-    if name == "RED":
-        args = (rng.integers(0, 99, n).astype(np.int32),)
-        return args, prim.red.ref(*args)
-    args = (rng.integers(0, 999, n).astype(np.int32),)
-    return args, prim.sel.ref(*args)
 
 
 def main():
     grid = make_bank_grid()
     rng = np.random.default_rng(0)
-    names = ["VA", "GEMV", "RED", "SEL"]
-    print(f"serving PrIM on {grid.n_banks} bank(s)")
+    entries = list(REGISTRY.values())
+    print(f"serving the full {len(entries)}-workload registry on "
+          f"{grid.n_banks} bank(s) "
+          f"({sum(e.pipelineable for e in entries)} pipelined, "
+          f"{sum(not e.pipelineable for e in entries)} serialized-only)")
 
     with PimScheduler(grid, n_chunks=4) as sched:
         inflight = []
-        for i in range(8):                       # sustained mixed stream:
-            name = names[i % len(names)]         # bursts of 3 same-workload
-            for _ in range(3):                   # requests (client bursts)
-                args, gold = make_request(name, rng)
-                req = sched.submit(name, *args, priority=i % 3)
-                inflight.append((req, gold))
-        for req, gold in inflight:
-            out = req.result(timeout=300)
-            np.testing.assert_allclose(np.asarray(out), gold,
-                                       rtol=1e-4, atol=1e-4)
+        for i, entry in enumerate(entries):      # sustained mixed stream:
+            for _ in range(2):                   # bursts of 2 same-workload
+                args = entry.make_args(rng, scale=1)
+                gold = entry.ref(*args)
+                req = sched.submit(entry.name, *args, priority=i % 3)
+                inflight.append((req, gold, entry))
+        for req, gold, entry in inflight:
+            entry.compare(req.result(timeout=600), gold)
 
     agg = sched.telemetry.aggregate()
     print(f"{agg['requests']} requests in {agg['wall_s']:.3f}s "
@@ -71,9 +57,11 @@ def main():
           f"(size-aware same-workload coalescing):")
     for bid in sorted(by_batch):
         rs = by_batch[bid]
+        mode = ("serialized" if rs[0].workload in SERIALIZED_ONLY
+                else f"{rs[0].n_chunks}-chunk pipeline")
         print(f"  batch {bid}: {rs[0].workload:5s} x{len(rs)} "
               f"prio={[r.priority for r in rs]} "
-              f"service={sum(r.service_s for r in rs):.3f}s")
+              f"service={sum(r.service_s for r in rs):.3f}s [{mode}]")
     print("all results match ref(); serving OK")
 
 

@@ -4,13 +4,18 @@ Workload → module map (paper Table 2 order):
   VA va | GEMV gemv | SpMV spmv | SEL sel | UNI uni | BS bs | TS ts |
   BFS bfs | MLP mlp | NW nw | HST-S/HST-L hist | RED red |
   SCAN-SSA/SCAN-RSS scan | TRNS trns
+
+``repro.prim.registry`` is the single source of truth: per-workload
+``WorkloadEntry`` with ref/pim/chunked callables, pipelineability, canonical
+benchmark args, and the equivalence comparator.  ``ALL`` (name → module) is
+derived from it for back-compat.
 """
 from . import bfs, bs, gemv, hist, mlp, nw, red, scan, sel, spmv, trns, ts, uni, va
+from . import common, registry
+from .registry import PIPELINEABLE, REGISTRY, SERIALIZED_ONLY
 
-ALL = {
-    "VA": va, "GEMV": gemv, "SpMV": spmv, "SEL": sel, "UNI": uni,
-    "BS": bs, "TS": ts, "BFS": bfs, "MLP": mlp, "NW": nw,
-    "HST": hist, "RED": red, "SCAN": scan, "TRNS": trns,
-}
+ALL = {name: e.module for name, e in REGISTRY.items()}
 
-__all__ = ["ALL"] + [m.__name__.split(".")[-1] for m in ALL.values()]
+__all__ = (["ALL", "REGISTRY", "PIPELINEABLE", "SERIALIZED_ONLY",
+            "common", "registry"]
+           + [m.__name__.split(".")[-1] for m in ALL.values()])

@@ -11,12 +11,16 @@ Both merge per-bank histograms on the host (tiny inter-DPU phase).
 """
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import transfer as tx
 from repro.core.banked import BankGrid
 from repro.kernels import ops
-from .common import PhaseTimer, pad_chunks, sync
+from .common import ChunkedWorkload, PhaseTimer, pad_chunks, register_chunked, sync
 
 
 def ref(pixels: np.ndarray, nbins: int) -> np.ndarray:
@@ -53,3 +57,49 @@ def pim_short(grid: BankGrid, pixels: np.ndarray, nbins: int = 256):
 
 def pim_long(grid: BankGrid, pixels: np.ndarray, nbins: int = 256):
     return _pim(grid, pixels, nbins, "long")
+
+
+# -- chunked phases (pipelined runtime) --------------------------------------
+# Histograms are associative: each chunk yields per-bank partial histograms
+# that retrieve sums bank-wise and merge sums chunk-wise.  Both padding kinds
+# (split_chunks zeros at the chunk tail, pad_chunks -1 sentinels at the bank
+# tail) land in bin 0, so merge subtracts one precomputed spurious count.
+# Uses the HST-L scatter-add form per bank (exact, variant-independent math).
+
+@functools.cache
+def _local(grid: BankGrid, nbins: int):
+    def local(pb):
+        clipped = jnp.clip(pb[0], 0, nbins - 1)
+        return jnp.zeros(nbins, jnp.int32).at[clipped].add(1)[None]
+    return jax.jit(grid.bank_local(local))
+
+
+def _split(grid, n_chunks, pixels, nbins=256):
+    chunks, n = tx.split_chunks(np.asarray(pixels), n_chunks)
+    per = chunks[0].shape[0]
+    per_bank = -(-per // grid.n_banks)
+    spurious = len(chunks) * per_bank * grid.n_banks - n
+    return {"nbins": nbins, "spurious": spurious}, chunks
+
+
+def _scatter(grid, meta, chunk):
+    pc, _ = pad_chunks(chunk, grid.n_banks, fill=-1)
+    return grid.to_banks(pc)
+
+
+def _compute(grid, meta, dp):
+    return _local(grid, meta["nbins"])(dp)
+
+
+def _retrieve(grid, meta, parts):
+    return grid.from_banks(parts).sum(axis=0)
+
+
+def _merge(grid, meta, parts):
+    hist = np.sum(parts, axis=0).astype(np.int32)
+    hist[0] -= meta["spurious"]
+    return hist
+
+
+chunked = register_chunked(ChunkedWorkload(
+    "HST", _split, _scatter, _compute, _retrieve, _merge))

@@ -8,13 +8,17 @@ Fig. 13 shows shrinking with parallel transfers.  ReLU after every layer.
 """
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from jax.sharding import PartitionSpec as P
 
+from repro.core import transfer as tx
 from repro.core.banked import AXIS, BankGrid
-from .common import PhaseTimer, pad_chunks, sync
+from .common import ChunkedWorkload, PhaseTimer, pad_chunks, register_chunked, sync
 
 
 def ref(weights: list[np.ndarray], x: np.ndarray) -> np.ndarray:
@@ -40,3 +44,49 @@ def pim(grid: BankGrid, weights: list[np.ndarray], x: np.ndarray):
         with t.phase("dpu_cpu"):
             h = grid.from_banks(out).reshape(-1)[:m]
     return h, t.times
+
+
+# -- chunked phases (pipelined runtime) --------------------------------------
+# The per-layer host round-trip that pim() reproduces (gather layer output,
+# re-broadcast as next input) would serialize the pipeline — each layer
+# depends on the previous one.  The chunked adaptation (DESIGN.md §4) keeps
+# chunks independent by replicating the hidden layers: split broadcasts every
+# non-final weight and enqueues the full replicated forward pass (each bank
+# redundantly computes the small hidden state, like BS replicates its array),
+# then only the *final* layer's rows are chunked across banks.  All of this
+# is async enqueue — nothing blocks until retrieve.
+
+@functools.cache
+def _local(grid: BankGrid):
+    return jax.jit(grid.bank_local(
+        lambda wb, hb: jnp.maximum(wb @ hb, 0),
+        in_specs=(P(AXIS), P())))
+
+
+def _split(grid, n_chunks, weights, x):
+    h = grid.broadcast(np.asarray(x))
+    for w in weights[:-1]:
+        h = jnp.maximum(grid.broadcast(np.asarray(w)) @ h, 0)
+    chunks, m = tx.split_chunks(np.asarray(weights[-1]), n_chunks)
+    return {"m": m, "per": chunks[0].shape[0], "dh": h}, chunks
+
+
+def _scatter(grid, meta, chunk):
+    wc, _ = pad_chunks(chunk, grid.n_banks)
+    return grid.to_banks(wc)
+
+
+def _compute(grid, meta, dw):
+    return _local(grid)(dw, meta["dh"])
+
+
+def _retrieve(grid, meta, out):
+    return grid.from_banks(out).reshape(-1)[:meta["per"]]
+
+
+def _merge(grid, meta, parts):
+    return np.concatenate(parts)[:meta["m"]]
+
+
+chunked = register_chunked(ChunkedWorkload(
+    "MLP", _split, _scatter, _compute, _retrieve, _merge))

@@ -12,12 +12,16 @@ timing split.  On-bank scans use the sequential-grid Pallas kernel.
 """
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import transfer as tx
 from repro.core.banked import BankGrid
 from repro.kernels import ops
-from .common import PhaseTimer, pad_chunks, sync
+from .common import ChunkedWorkload, PhaseTimer, pad_chunks, register_chunked, sync
 
 
 def ref(x: np.ndarray) -> np.ndarray:
@@ -77,3 +81,57 @@ def pim_rss(grid: BankGrid, x: np.ndarray, via: str = "host",
     with t.phase("dpu_cpu"):
         host = grid.from_banks(out).reshape(-1)[:n]
     return host, t.times
+
+
+# -- chunked phases (pipelined runtime) --------------------------------------
+# SSA shape: the bank-local phase produces per-bank exclusive scans plus
+# per-bank totals; the host applies the per-bank offsets during the blocking
+# retrieve (the paper's CPU scan) and the cross-chunk running offset during
+# merge.  A chunk's scan never depends on another chunk's *device* state —
+# only on its host-side total — so chunk k+1's scatter/compute overlap chunk
+# k's retrieve exactly like the stateless workloads.  split_chunks zero-pads
+# the tail, which is scan-safe (padding contributes nothing to any total).
+
+@functools.cache
+def _local(grid: BankGrid):
+    def local(xb):
+        v = xb[0]
+        s = jnp.cumsum(v) - v                    # exclusive scan
+        return s[None], (s[-1] + v[-1])[None]
+    return jax.jit(grid.bank_local(local))
+
+
+def _split(grid, n_chunks, x):
+    chunks, n = tx.split_chunks(np.asarray(x), n_chunks)
+    return {"n": n, "per": chunks[0].shape[0],
+            "dtype": np.asarray(x).dtype}, chunks
+
+
+def _scatter(grid, meta, chunk):
+    xc, _ = pad_chunks(chunk, grid.n_banks)
+    return grid.to_banks(xc)
+
+
+def _compute(grid, meta, dx):
+    return _local(grid)(dx)
+
+
+def _retrieve(grid, meta, outs):
+    scans, lasts = outs
+    s = grid.from_banks(scans)                       # (banks, per)
+    t = grid.from_banks(lasts).reshape(-1)           # (banks,)
+    off = np.concatenate([[0], np.cumsum(t)[:-1]]).astype(s.dtype)
+    # trim bank-tail padding: the chunk contributes exactly `per` elements
+    return (s + off[:, None]).reshape(-1)[:meta["per"]], t.sum()
+
+
+def _merge(grid, meta, parts):
+    out, run = [], 0
+    for flat, total in parts:
+        out.append(flat + run)
+        run += total
+    return np.concatenate(out)[:meta["n"]].astype(meta["dtype"])
+
+
+chunked = register_chunked(ChunkedWorkload(
+    "SCAN", _split, _scatter, _compute, _retrieve, _merge))

@@ -10,11 +10,14 @@ Result gathered by the host.  Validated against ``x.T``.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
+import functools
+
+import jax
 import numpy as np
 
+from repro.core import transfer as tx
 from repro.core.banked import BankGrid
-from .common import PhaseTimer, sync
+from .common import ChunkedWorkload, PhaseTimer, register_chunked, sync
 
 
 def ref(x: np.ndarray) -> np.ndarray:
@@ -48,3 +51,58 @@ def pim(grid: BankGrid, x: np.ndarray, m: int = 8, n: int = 8):
     with t.phase("dpu_cpu"):
         host = grid.from_banks(out).reshape(N, M)
     return host, t.times
+
+
+# -- chunked phases (pipelined runtime) --------------------------------------
+# A chunk of input *rows* is a chunk of output *columns*: each chunk runs the
+# same 3-step tiled decomposition on its (rows, N) slab (step 1 relayout in
+# scatter, steps 2-3 bank-local), and merge concatenates the transposed slabs
+# along the column axis.  Chunk rows are zero-padded to a multiple of m so
+# the tile factorization divides; the pad columns are trimmed in retrieve.
+
+@functools.cache
+def _local(grid: BankGrid, m: int, n: int):
+    def local(xb):
+        b, rows = xb.shape[0], xb.shape[1]
+        tiles = xb.reshape(b, rows // m, m, n).transpose(0, 1, 3, 2)
+        return tiles.transpose(0, 2, 1, 3)          # (N'_loc, n, M', m)
+    return jax.jit(grid.bank_local(local))
+
+
+def _split(grid, n_chunks, x, m: int = 8, n: int = 8):
+    x = np.asarray(x)
+    M, N = x.shape
+    assert (N // n) * n == N, "n must divide N"
+    assert (N // n) % grid.n_banks == 0, "N' must divide across banks"
+    chunks, _ = tx.split_chunks(x, n_chunks)
+    per = chunks[0].shape[0]
+    pad = (-per) % m
+    if pad:
+        chunks = [np.pad(c, ((0, pad), (0, 0))) for c in chunks]
+    return {"M": M, "N": N, "m": m, "n": n, "per": per}, chunks
+
+
+def _scatter(grid, meta, chunk):
+    rows, N = chunk.shape
+    Np = N // meta["n"]
+    step1 = np.ascontiguousarray(
+        chunk.reshape(rows, Np, meta["n"]).transpose(1, 0, 2))
+    return grid.to_banks(step1)
+
+
+def _compute(grid, meta, dx):
+    return _local(grid, meta["m"], meta["n"])(dx)
+
+
+def _retrieve(grid, meta, out):
+    slab = grid.from_banks(out)                     # (N', n, M'_c, m)
+    rows = slab.shape[2] * slab.shape[3]
+    return slab.reshape(meta["N"], rows)[:, :meta["per"]]
+
+
+def _merge(grid, meta, parts):
+    return np.concatenate(parts, axis=1)[:, :meta["M"]]
+
+
+chunked = register_chunked(ChunkedWorkload(
+    "TRNS", _split, _scatter, _compute, _retrieve, _merge))

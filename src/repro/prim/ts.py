@@ -8,13 +8,16 @@ merges per-bank minima (tiny inter-DPU phase).
 """
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from jax.sharding import PartitionSpec as P
 
 from repro.core.banked import AXIS, BankGrid
-from .common import PhaseTimer, sync
+from .common import ChunkedWorkload, PhaseTimer, register_chunked, sync
 
 
 def _znorm_dists(series, query):
@@ -67,3 +70,66 @@ def pim(grid: BankGrid, series: np.ndarray, query: np.ndarray):
         b = int(np.argmin(mins))
         result = (float(mins[b]), int(b * per + args[b]))
     return result, t.times
+
+
+# -- chunked phases (pipelined runtime) --------------------------------------
+# The series splits into chunks with the same query-length halo the paper
+# adds per DPU (scatter re-applies it per bank inside the chunk); each chunk
+# retrieves one (min, local argmin) and merge keeps the first global minimum
+# in series order, matching np.argmin tie-breaking.  Halo/tail padding is
+# inf, whose windows z-normalize to nan and are masked to inf like pim().
+
+def _halo_chunks(x, n_pieces, per, halo, fill):
+    padded = np.concatenate(
+        [x, np.full(per * n_pieces + halo - len(x), fill, x.dtype)])
+    return [padded[i * per: i * per + per + halo] for i in range(n_pieces)]
+
+
+@functools.cache
+def _local(grid: BankGrid):
+    def local(sb, qb):
+        d = _znorm_dists(sb[0], qb)
+        d = jnp.where(jnp.isnan(d), jnp.inf, d)
+        i = jnp.argmin(d)
+        return d[i][None], i.astype(jnp.int32)[None]
+    return jax.jit(grid.bank_local(local, in_specs=(P(AXIS), P())))
+
+
+def _split(grid, n_chunks, series, query):
+    series, query = np.asarray(series), np.asarray(query)
+    m = len(query)
+    per = -(-len(series) // n_chunks)
+    chunks = _halo_chunks(series, n_chunks, per, m - 1, np.inf)
+    meta = {"m": m, "per": per, "dq": grid.broadcast(query)}
+    return meta, chunks
+
+
+def _scatter(grid, meta, chunk):
+    per_b = -(-meta["per"] // grid.n_banks)
+    rows = _halo_chunks(chunk, grid.n_banks, per_b, meta["m"] - 1, np.inf)
+    return grid.to_banks(np.stack(rows))
+
+
+def _compute(grid, meta, ds):
+    return _local(grid)(ds, meta["dq"])
+
+
+def _retrieve(grid, meta, outs):
+    dmin, darg = outs
+    mins = grid.from_banks(dmin).reshape(-1)
+    args = grid.from_banks(darg).reshape(-1)
+    per_b = -(-meta["per"] // grid.n_banks)
+    b = int(np.argmin(mins))
+    return float(mins[b]), int(b * per_b + args[b])
+
+
+def _merge(grid, meta, parts):
+    best, best_idx = np.inf, 0
+    for k, (mn, arg) in enumerate(parts):
+        if mn < best:
+            best, best_idx = mn, k * meta["per"] + arg
+    return best, best_idx
+
+
+chunked = register_chunked(ChunkedWorkload(
+    "TS", _split, _scatter, _compute, _retrieve, _merge))

@@ -7,11 +7,15 @@ value per bank — exactly the paper's description).
 """
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import transfer as tx
 from repro.core.banked import BankGrid
-from .common import PhaseTimer, pad_chunks, sync
+from .common import ChunkedWorkload, PhaseTimer, pad_chunks, register_chunked, sync
 
 
 def ref(x: np.ndarray) -> np.ndarray:
@@ -66,3 +70,65 @@ def pim(grid: BankGrid, x: np.ndarray):
     with t.phase("inter_dpu"):
         host = np.concatenate([bufs[i, :cnts[i]] for i in range(n_banks)])
     return host, t.times
+
+
+# -- chunked phases (pipelined runtime) --------------------------------------
+# The paper's boundary handshake (bank i needs bank i-1's last value) does
+# NOT serialize the chunk pipeline: every boundary value is an element of the
+# *input*, so split resolves chunk k's predecessor from the raw array on the
+# host, and scatter resolves the intra-chunk bank boundaries the same way.
+# Chunks stay fully independent; the ragged merge is SEL's.
+
+def _sentinel(dtype):
+    return np.asarray(np.iinfo(dtype).min if np.issubdtype(dtype, np.integer)
+                      else np.nan, dtype)
+
+
+@functools.cache
+def _local(grid: BankGrid):
+    def local(xb, pb, lb):
+        out, count = _local_unique(xb[0], pb[0], lb[0])
+        return out[None], count[None]
+    return jax.jit(grid.bank_local(local))
+
+
+def _split(grid, n_chunks, x):
+    x = np.asarray(x)
+    chunks, n = tx.split_chunks(x, n_chunks)
+    per = chunks[0].shape[0]
+    prevs = [_sentinel(x.dtype) if i == 0 or i * per > n - 1
+             else x[i * per - 1] for i in range(len(chunks))]
+    valid = [min(per, max(0, n - i * per)) for i in range(len(chunks))]
+    return {"n": n}, list(zip(chunks, prevs, valid))
+
+
+def _scatter(grid, meta, chunk):
+    x, prev0, valid = chunk
+    xc, _ = pad_chunks(x, grid.n_banks)
+    per = xc.shape[1]
+    lens = np.clip(valid - per * np.arange(grid.n_banks), 0, per) \
+        .astype(np.int32)
+    prev = np.empty(grid.n_banks, x.dtype)
+    prev[0] = prev0
+    for i in range(1, grid.n_banks):
+        prev[i] = xc[i - 1, lens[i - 1] - 1] if lens[i - 1] else prev[i - 1]
+    return grid.to_banks(xc), grid.to_banks(prev), grid.to_banks(lens)
+
+
+def _compute(grid, meta, bufs):
+    return _local(grid)(*bufs)
+
+
+def _retrieve(grid, meta, outs):
+    buf, counts = outs
+    bufs = grid.from_banks(buf)
+    cnts = grid.from_banks(counts).reshape(-1)
+    return np.concatenate([bufs[i, :cnts[i]] for i in range(grid.n_banks)])
+
+
+def _merge(grid, meta, parts):
+    return np.concatenate(parts)
+
+
+chunked = register_chunked(ChunkedWorkload(
+    "UNI", _split, _scatter, _compute, _retrieve, _merge))

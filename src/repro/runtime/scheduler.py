@@ -10,6 +10,13 @@ the grid and decides execution order:
   and streamed through a single chunk pipeline, so the banks never drain
   between them (``pipeline.run_pipelined_many``).
 
+The workload set comes from :mod:`repro.prim.registry`: every registry entry
+is servable.  Pipelineable entries run through the chunk pipeline;
+serialized-only entries (NW, BFS — their inter-DPU dependency structure
+forbids independent chunks, see the registry reasons) fall back to the
+faithful serialized ``pim()``, still queued/prioritized/recorded like any
+other request.
+
 Two execution modes:
 
 * ``drain()`` — process the queue in the calling thread (deterministic;
@@ -91,9 +98,15 @@ class PimScheduler:
         self.n_chunks = n_chunks
         self.max_batch_requests = max_batch_requests
         self.max_batch_bytes = max_batch_bytes
+        self.serialized: dict[str, Any] = {}
         if workloads is None:
-            from repro.prim import common   # lazy: pulls the whole suite
-            workloads = common.CHUNKED
+            from repro.prim import registry   # lazy: pulls the whole suite
+            workloads = {name: e.chunked
+                         for name, e in registry.REGISTRY.items()
+                         if e.pipelineable}
+            self.serialized = {name: e.pim
+                               for name, e in registry.REGISTRY.items()
+                               if not e.pipelineable}
         self.workloads = dict(workloads)
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         self._queue: list = []                  # heap of (-prio, seq, req)
@@ -107,9 +120,9 @@ class PimScheduler:
 
     def submit(self, workload: str, *args, priority: int = 0) -> PimRequest:
         """Enqueue one workload invocation; returns a waitable handle."""
-        if workload not in self.workloads:
+        if workload not in self.workloads and workload not in self.serialized:
             raise KeyError(f"unknown workload {workload!r}; have "
-                           f"{sorted(self.workloads)}")
+                           f"{sorted(self.workloads) + sorted(self.serialized)}")
         seq = next(self._seq)
         rec = RequestRecord(request_id=seq, workload=workload,
                             n_items=_nitems(args), bytes_in=_nbytes(args),
@@ -148,8 +161,32 @@ class PimScheduler:
 
     # -- execution ------------------------------------------------------------
 
+    def _run_serialized(self, batch: Sequence[PimRequest], bid: int) -> None:
+        """Serialized-only fallback (NW/BFS): run each request's faithful
+        ``pim()`` back-to-back — no chunk overlap exists to exploit — but
+        keep the full request lifecycle (priority, telemetry, batching)."""
+        fn = self.serialized[batch[0].workload]
+        for req in batch:
+            rec = req.record
+            rec.batch_id = bid
+            rec.t_start = now()
+            try:
+                result, times = fn(self.grid, *req.args)
+            except BaseException as e:            # noqa: BLE001 — forwarded
+                req._fulfill(error=e)
+                continue
+            rec.t_finish = now()
+            rec.phases = times
+            rec.bytes_out = (result.nbytes
+                             if isinstance(result, np.ndarray) else 0)
+            self.telemetry.record(rec)
+            req._fulfill(result=result)
+
     def _run_batch(self, batch: Sequence[PimRequest]) -> None:
         bid = next(self._batch_seq)
+        if batch[0].workload in self.serialized:
+            self._run_serialized(batch, bid)
+            return
         records = [r.record for r in batch]
         for rec in records:
             rec.batch_id = bid

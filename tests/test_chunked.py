@@ -1,0 +1,76 @@
+"""Chunked-vs-serialized equivalence across the FULL registry.
+
+For every registry entry with chunked support, the pipelined execution must
+produce the same result as the serialized ``pim()`` baseline and the gold
+``ref()`` — in-process at the real device count, and (one subprocess, since
+jax locks the device count at init) at 8 simulated banks.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.prim.registry import PIPELINEABLE, REGISTRY
+from repro.runtime import run_pipelined
+
+CHUNKED_NAMES = list(PIPELINEABLE)
+
+
+@pytest.mark.parametrize("name", CHUNKED_NAMES)
+@pytest.mark.parametrize("n_chunks", [1, 3])
+def test_chunked_matches_pim_and_ref(bank_grid, name, n_chunks):
+    e = REGISTRY[name]
+    rng = np.random.default_rng(hash(name) % (1 << 31))
+    args = e.make_args(rng, scale=1)
+    gold = e.ref(*args)
+    serial, times = e.pim(bank_grid, *args)
+    piped = run_pipelined(bank_grid, e.chunked, *args,
+                          n_chunks=n_chunks).value
+    e.compare(serial, gold)
+    e.compare(piped, gold)
+    e.compare(piped, serial)
+    assert times.total > 0
+
+
+# -- 8 simulated banks (single subprocess, parametrized assertions) -----------
+
+SCRIPT = r"""
+import sys; sys.path.insert(0, {src!r})
+import numpy as np
+from repro.core import make_bank_grid
+from repro.prim.registry import PIPELINEABLE, REGISTRY
+from repro.runtime import run_pipelined
+g = make_bank_grid()
+assert g.n_banks == 8, g.n_banks
+for name in PIPELINEABLE:
+    e = REGISTRY[name]
+    rng = np.random.default_rng(hash(name) % (1 << 31))
+    args = e.make_args(rng, scale=1)
+    gold = e.ref(*args)
+    serial, _ = e.pim(g, *args)
+    piped = run_pipelined(g, e.chunked, *args, n_chunks=3).value
+    e.compare(serial, gold)
+    e.compare(piped, gold)
+    e.compare(piped, serial)
+    print("CHUNKEQ-OK", name, flush=True)
+print("CHUNKEQ-DONE")
+"""
+
+
+@pytest.fixture(scope="session")
+def eight_bank_run():
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    out = subprocess.run([sys.executable, "-c", SCRIPT.format(src=src)],
+                         env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", CHUNKED_NAMES)
+def test_chunked_equivalence_8_banks(eight_bank_run, name):
+    assert f"CHUNKEQ-OK {name}" in eight_bank_run

@@ -1,0 +1,69 @@
+"""The workload registry: completeness, capability flags, canonical args,
+and the scheduler's serialized fallback for non-pipelineable workloads."""
+import numpy as np
+import pytest
+
+from repro import prim
+from repro.prim.registry import (PIPELINEABLE, REGISTRY, SERIALIZED_ONLY,
+                                 markdown_table)
+from repro.runtime import PimScheduler
+
+
+def test_registry_covers_the_suite():
+    assert len(REGISTRY) == 14                      # paper Table 2 modules
+    labels = [v for e in REGISTRY.values() for v in e.run_variants()]
+    assert len(labels) == 16                        # the 16-workload suite
+    assert set(PIPELINEABLE) == set(REGISTRY) - {"NW", "BFS"}
+    assert set(SERIALIZED_ONLY) == {"NW", "BFS"}
+    for name, reason in SERIALIZED_ONLY.items():
+        assert "independent" in reason, (name, reason)   # documented why
+
+
+def test_all_dict_derives_from_registry():
+    assert set(prim.ALL) == set(REGISTRY)
+    for name, entry in REGISTRY.items():
+        assert prim.ALL[name] is entry.module
+
+
+def test_make_args_feed_ref(rng):
+    """Every entry's canonical generator produces ref()-consumable args."""
+    for entry in REGISTRY.values():
+        args = entry.make_args(rng, scale=1)
+        out = entry.ref(*args)
+        assert out is not None
+        entry.compare(out, out)                     # comparator self-consistent
+
+
+def test_chunked_flag_consistency():
+    for entry in REGISTRY.values():
+        if entry.pipelineable:
+            assert entry.chunked is not None and not entry.reason
+        else:
+            assert entry.chunked is None and entry.reason
+
+
+def test_markdown_table_lists_everything():
+    table = markdown_table()
+    for name in REGISTRY:
+        assert f"| {name} |" in table
+    assert table.count("serialized `pim()` only") == 2
+
+
+def test_scheduler_serves_serialized_only(bank_grid, rng):
+    """NW/BFS are not silently skipped: submit() falls back to pim()."""
+    sched = PimScheduler(bank_grid, n_chunks=2)
+    s1 = rng.integers(0, 4, 48).astype(np.int32)
+    s2 = rng.integers(0, 4, 40).astype(np.int32)
+    adj = prim.bfs.random_graph(101, 3, seed=7)
+    nw_req = sched.submit("NW", s1, s2, priority=1)
+    bfs_req = sched.submit("BFS", adj, 0)
+    sched.drain()
+    assert (nw_req.result() == prim.nw.ref(s1, s2)).all()
+    assert (bfs_req.result() == prim.bfs.ref(adj, 0)).all()
+    recs = {r.workload: r for r in sched.telemetry.records}
+    assert recs["NW"].phases.total > 0 and recs["BFS"].phases.total > 0
+
+
+def test_scheduler_rejects_unknown(bank_grid):
+    with pytest.raises(KeyError):
+        PimScheduler(bank_grid).submit("FFT", np.zeros(4))
