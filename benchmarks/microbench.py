@@ -135,3 +135,19 @@ def fig10_transfers(grid=None):
 
 ALL = [fig4_arith_throughput, fig5_wram_stream, fig6_mram_latency,
        fig7_mram_stream, fig8_strided_random, fig9_roofline, fig10_transfers]
+
+
+def smoke(grid=None):
+    """Minimal characterization slice for ``tools/bench.py --smoke``: one
+    arithmetic point per key dtype plus the Fig. 10 transfer sweep — the two
+    measured limits the autotuner's plans derive from."""
+    rows = []
+    for dtype in ("int32", "float"):
+        rows.append({
+            "table": "fig4", "op": "add", "dtype": dtype, "tasklets": 16,
+            "dpu_model_mops": DPU.arith_throughput("add", dtype, 16) / 1e6,
+            "measured_backend_mops": ch.arith_throughput(
+                "add", dtype, lanes=16, n=1 << 16, reps=2)["mops"],
+        })
+    rows += fig10_transfers(grid)
+    return rows

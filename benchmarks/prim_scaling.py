@@ -14,36 +14,43 @@ from repro.core import make_bank_grid
 from repro.prim.registry import REGISTRY
 
 
-def _workloads(scale: int):
+def _workloads(scale: int, labels=None):
     """label -> (grid -> (result, PhaseTimes)), straight from the registry:
     every entry's canonical args, every serialized variant (HST-S/HST-L,
-    SCAN-SSA/SCAN-RSS, ...) — nothing hand-maintained."""
+    SCAN-SSA/SCAN-RSS, ...) — nothing hand-maintained.  ``labels`` filters
+    *before* argument generation (bench --smoke runs a subset)."""
     rng = np.random.default_rng(0)
     runs = {}
     for entry in REGISTRY.values():
+        variants = {label: fn for label, fn in entry.run_variants().items()
+                    if not labels or label in labels}
+        if not variants:
+            continue
         args = entry.make_args(rng, scale)
-        for label, fn in entry.run_variants().items():
+        for label, fn in variants.items():
             runs[label] = (lambda g, fn=fn, args=args: fn(g, *args))
     return runs
 
 
-def strong_scaling(bank_counts=(1,)):
-    """Fig. 13/14 analogue: fixed problem, varying bank count."""
+def strong_scaling(bank_counts=(1,), scale: int = 4, workloads=None):
+    """Fig. 13/14 analogue: fixed problem, varying bank count.
+    ``workloads`` restricts to a subset of registry names (bench --smoke)."""
     rows = []
     for nb in bank_counts:
         grid = make_bank_grid(nb)
-        for name, fn in _workloads(scale=4).items():
+        for name, fn in _workloads(scale=scale, labels=workloads).items():
             _, t = fn(grid)
             rows.append({"table": "fig13_strong", **t.row(name, nb)})
     return rows
 
 
-def weak_scaling(bank_counts=(1,)):
+def weak_scaling(bank_counts=(1,), base_scale: int = 1, workloads=None):
     """Fig. 15 analogue: fixed problem *per bank*."""
     rows = []
     for nb in bank_counts:
         grid = make_bank_grid(nb)
-        for name, fn in _workloads(scale=nb).items():
+        for name, fn in _workloads(scale=base_scale * nb,
+                                   labels=workloads).items():
             _, t = fn(grid)
             rows.append({"table": "fig15_weak", **t.row(name, nb)})
     return rows

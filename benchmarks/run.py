@@ -1,10 +1,18 @@
 """Benchmark driver — one table per paper figure. Prints CSV rows.
 
 Suites:
-  micro    figs 4-10 (microbenchmark characterization, model vs measured)
-  prim     figs 12-15 (PrIM strong/weak scaling with phase breakdown)
-  compare  figs 16-17 (CPU measured vs PIM/TPU modeled)
-  roofline S-Roofline table from dry-run records (if present)
+  micro      figs 4-10 (microbenchmark characterization, model vs measured)
+  prim       figs 12-15 (PrIM strong/weak scaling with phase breakdown)
+  throughput runtime serialized-vs-pipelined table (full registry)
+  compare    figs 16-17 (CPU measured vs PIM/TPU modeled)
+  roofline   S-Roofline table from dry-run records (if present)
+
+Workload coverage everywhere comes from ``repro.prim.registry`` (the prim /
+throughput suites iterate it; the compare suite's per-workload model
+constants are keyed and validated against its variant labels) — no suite
+carries a hand-maintained workload list.  For the machine-readable
+schema-versioned artifact CI gates on, use ``tools/bench.py`` instead
+(EXPERIMENTS.md §Bench-artifacts) — it wraps these same suites.
 
 ``--banks N`` re-execs under N forced host devices so the scaling tables
 sweep a real bank axis (kept out of the default path: benches see the true
@@ -44,13 +52,9 @@ def emit(rows) -> None:
 def suite_micro(fast: bool = True):
     from benchmarks import microbench as mb
     rows = []
-    rows += mb.fig4_arith_throughput(fast=fast)
-    rows += mb.fig5_wram_stream()
-    rows += mb.fig6_mram_latency()
-    rows += mb.fig7_mram_stream()
-    rows += mb.fig8_strided_random()
-    rows += mb.fig9_roofline()
-    rows += mb.fig10_transfers()
+    for fig in mb.ALL:           # every registered figure, no hand list
+        kw = {"fast": fast} if fig is mb.fig4_arith_throughput else {}
+        rows += fig(**kw)
     return rows
 
 
@@ -63,6 +67,11 @@ def suite_prim():
     rows += ps.strong_scaling(bank_counts=counts)
     rows += ps.weak_scaling(bank_counts=counts)
     return rows
+
+
+def suite_throughput():
+    from benchmarks.throughput import throughput
+    return throughput()
 
 
 def suite_compare():
@@ -79,7 +88,8 @@ def suite_roofline():
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
-                    choices=["all", "micro", "prim", "compare", "roofline"])
+                    choices=["all", "micro", "prim", "throughput", "compare",
+                             "roofline"])
     ap.add_argument("--banks", type=int, default=0,
                     help="re-exec with N forced host devices")
     ap.add_argument("--full", action="store_true",
@@ -100,6 +110,8 @@ def main() -> None:
         rows += suite_micro(fast=not args.full)
     if args.suite in ("all", "prim"):
         rows += suite_prim()
+    if args.suite == "throughput":     # not in "all": minutes-long on 1 bank
+        rows += suite_throughput()
     if args.suite in ("all", "compare"):
         rows += suite_compare()
     if args.suite in ("all", "roofline"):

@@ -49,6 +49,19 @@ HOST_MEM_BW = 20e9        # host-side merge bandwidth (union/merge loops)
 SYNC_LATENCY = 0.25e-3    # one host round-trip (launch + retrieve)
 
 
+def _check_registry_coverage() -> None:
+    """The WORKLOADS constants are per-workload model *data* (Table 2 mixes),
+    but which workloads exist is the registry's call: fail loudly if the two
+    ever drift apart (lazy import — the registry pulls the whole suite)."""
+    from repro.prim.registry import REGISTRY
+    labels = {label for e in REGISTRY.values() for label in e.run_variants()}
+    if set(WORKLOADS) != labels:
+        raise AssertionError(
+            f"system_compare.WORKLOADS out of sync with prim.registry: "
+            f"missing={sorted(labels - set(WORKLOADS))} "
+            f"extra={sorted(set(WORKLOADS) - labels)}")
+
+
 def _pim_time(n_elems: int, instr: float, mram_b: float, inter_b: float,
               imbalance: float = 1.0, host_b: float = 0.0,
               sync_rounds: int = 0) -> float:
@@ -97,6 +110,7 @@ def _cpu_measured(name: str, n: int) -> float:
 
 
 def compare(n_elems: int = 4_000_000):
+    _check_registry_coverage()
     rows = []
     for name, (instr, mram_b, inter_b, paper_speedup, flops, hbm_b,
                imbalance, host_b, sync_rounds) in WORKLOADS.items():

@@ -183,6 +183,49 @@ def intensity_sweep(ops_per_elem: int, dtype: str = "float",
             "mops": max(ops_per_elem, 1) * n / sec / 1e6, "seconds": sec}
 
 
+# -- autotune calibration sweeps (DESIGN.md §8) ------------------------------
+#
+# The autotuner's measured analogues of the paper's Eqs. 1-4: each pipeline
+# stage's time for b bytes is affine, t(b) = alpha + b / bw (Eq. 3's shape).
+# These sweeps produce the (nbytes, seconds) points the affine fit consumes.
+
+def push_pull_sweep(grid: BankGrid, nbytes=(1 << 18, 1 << 20, 1 << 22),
+                    reps: int = 5) -> list[dict]:
+    """CPU→bank scatter and bank→CPU retrieve latency vs payload size."""
+    rows = []
+    for size in nbytes:
+        buf = np.zeros((grid.n_banks, max(size // 8 // grid.n_banks, 1)),
+                       np.int64)
+        push_s = _time(lambda b: tx.push_parallel(grid, b)[0], buf, reps=reps)
+        dev, _ = tx.push_parallel(grid, buf)
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            grid.from_banks(dev)
+            ts.append(time.perf_counter() - t0)
+        rows.append({"nbytes": buf.nbytes, "push_s": push_s,
+                     "pull_s": float(np.median(ts))})
+    return rows
+
+
+def bank_compute_sweep(grid: BankGrid, nbytes=(1 << 18, 1 << 20, 1 << 22),
+                       reps: int = 5) -> list[dict]:
+    """Bank-local streaming-compute latency vs payload size (one jitted
+    elementwise phase per size — the dispatch cost is part of the alpha the
+    fit recovers, exactly what the chunk planner must amortize)."""
+    rows = []
+    local = jax.jit(grid.bank_local(lambda x: x * np.int64(3) + np.int64(1),
+                                    in_specs=None))
+    for size in nbytes:
+        buf = grid.to_banks(np.zeros(
+            (grid.n_banks, max(size // 8 // grid.n_banks, 1)), np.int64))
+        sec = _time(local, buf, reps=reps)
+        leaves = jax.tree_util.tree_leaves(buf)
+        rows.append({"nbytes": sum(x.nbytes for x in leaves),
+                     "compute_s": sec})
+    return rows
+
+
 # -- §3.4 CPU<->bank transfers (Fig. 10) -------------------------------------
 
 def transfer_sweep(grid: BankGrid, mb_per_bank: int = 4) -> list[dict]:

@@ -23,6 +23,21 @@ import dataclasses
 import math
 from typing import Mapping
 
+def fit_affine(xs, ys) -> tuple[float, float]:
+    """Least-squares fit of y = alpha + beta * x (the shape of the paper's
+    Eq. 3, reused by the autotuner's stage fits — DESIGN.md §8)."""
+    n = len(xs)
+    sx = sum(xs); sy = sum(ys)
+    sxx = sum(x * x for x in xs)
+    sxy = sum(x * y for x, y in zip(xs, ys))
+    denom = n * sxx - sx * sx
+    if denom == 0:
+        return (sy / n if n else 0.0), 0.0
+    beta = (n * sxy - sx * sy) / denom
+    alpha = (sy - beta * sx) / n
+    return alpha, beta
+
+
 # ---------------------------------------------------------------------------
 # UPMEM DPU model (paper §3)
 # ---------------------------------------------------------------------------
@@ -129,12 +144,7 @@ class DpuModel:
     @staticmethod
     def fit_dma(sizes, cycles) -> tuple[float, float]:
         """Least-squares fit of Eq. 3; returns (alpha, beta)."""
-        n = len(sizes)
-        sx = sum(sizes); sy = sum(cycles)
-        sxx = sum(s * s for s in sizes); sxy = sum(s * c for s, c in zip(sizes, cycles))
-        beta = (n * sxy - sx * sy) / (n * sxx - sx * sx)
-        alpha = (sy - beta * sx) / n
-        return alpha, beta
+        return fit_affine(sizes, cycles)
 
 
 @dataclasses.dataclass(frozen=True)

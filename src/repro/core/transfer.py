@@ -43,6 +43,12 @@ def _nbytes(x) -> int:
     return int(np.prod(x.shape)) * x.dtype.itemsize if hasattr(x, "shape") else 0
 
 
+def tree_nbytes(args) -> int:
+    """Total payload bytes across a pytree of arrays (MLP passes a *list* of
+    layer matrices — a flat top-level scan undercounts it)."""
+    return sum(_nbytes(leaf) for leaf in jax.tree_util.tree_leaves(args))
+
+
 # -- layout conversion ("transposition library") ----------------------------
 
 def to_banked(x: np.ndarray, n_banks: int, axis: int = 0):

@@ -77,6 +77,13 @@ class WorkloadEntry:
         """label -> serialized pim callable (scaling-table sweep)."""
         return self.variants or {self.name: self.pim}
 
+    def arg_nbytes(self, args) -> int:
+        """Input payload bytes of one invocation (pytree-aware: MLP passes a
+        list of layer matrices).  What the autotuner and bench artifacts
+        report as ``bytes_in``."""
+        from repro.core.transfer import tree_nbytes
+        return tree_nbytes(args)
+
 
 # -- canonical argument generators -------------------------------------------
 # Sizes at scale=1 are test-sized (seconds on a CPU host); benchmarks pass

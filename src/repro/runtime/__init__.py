@@ -1,3 +1,5 @@
+from .autotune import (StageFit, TunedPlan, TuningResult, WorkloadProfile,
+                       autotune, calibrate, plan_for, probe_plan)
 from .elastic import carve_mesh, reshard, shardings_for, simulate_failure
 from .pipeline import PipelineResult, run_pipelined, run_pipelined_many
 from .scheduler import PimRequest, PimScheduler
@@ -6,4 +8,6 @@ from .telemetry import RequestRecord, Telemetry
 __all__ = ["carve_mesh", "reshard", "shardings_for", "simulate_failure",
            "StepMonitor", "StragglerConfig", "Watchdog",
            "PipelineResult", "run_pipelined", "run_pipelined_many",
-           "PimRequest", "PimScheduler", "RequestRecord", "Telemetry"]
+           "PimRequest", "PimScheduler", "RequestRecord", "Telemetry",
+           "StageFit", "TunedPlan", "TuningResult", "WorkloadProfile",
+           "autotune", "calibrate", "plan_for", "probe_plan"]

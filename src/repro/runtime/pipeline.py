@@ -34,6 +34,8 @@ from .telemetry import RequestRecord, _phases
 if TYPE_CHECKING:  # annotation-only: importing repro.prim pulls the suite
     from repro.prim.common import ChunkedWorkload, PhaseTimes
 
+    from .autotune import TunedPlan
+
 
 @dataclasses.dataclass
 class PipelineResult:
@@ -65,18 +67,22 @@ class _Buckets:
 
 
 def run_pipelined(grid: BankGrid, workload: ChunkedWorkload, *args,
-                  n_chunks: int = 4,
+                  n_chunks: int = 4, plan: TunedPlan | None = None,
                   record: RequestRecord | None = None) -> PipelineResult:
-    """Run one request through the chunk pipeline; returns PipelineResult."""
+    """Run one request through the chunk pipeline; returns PipelineResult.
+    A :class:`~repro.runtime.autotune.TunedPlan` overrides ``n_chunks``."""
+    if plan is not None:
+        n_chunks = plan.n_chunks
     records = [record] if record is not None else None
     results, makespans, phases = run_pipelined_many(
-        grid, workload, [args], n_chunks=n_chunks, records=records,
-        _full=True)
+        grid, workload, [args], n_chunks=n_chunks, plan=plan,
+        records=records, _full=True)
     return PipelineResult(results[0], makespans[0], phases[0], n_chunks)
 
 
 def run_pipelined_many(grid: BankGrid, workload: ChunkedWorkload,
                        requests: Sequence[tuple], n_chunks: int = 4,
+                       plan: TunedPlan | None = None,
                        records: Sequence[RequestRecord] | None = None,
                        _full: bool = False):
     """Stream every request's chunks through one double-buffered pipeline.
@@ -85,8 +91,15 @@ def run_pipelined_many(grid: BankGrid, workload: ChunkedWorkload,
     the list of results (plus per-request makespans and phase buckets when
     ``_full``).  Requests complete in submission order; a request's result is
     merged as soon as its last chunk retires, while later requests' chunks
-    are already in flight.
+    are already in flight.  A :class:`~repro.runtime.autotune.TunedPlan`
+    overrides ``n_chunks`` and stamps its predicted overlap on the records.
     """
+    if plan is not None:
+        n_chunks = plan.n_chunks
+        if records is not None:
+            for rec in records:
+                rec.tuned = True
+                rec.predicted_overlap = plan.predicted_overlap
     n_req = len(requests)
     metas: list = [None] * n_req
     flat: list = []                       # (req_idx, chunk)

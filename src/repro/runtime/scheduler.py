@@ -8,7 +8,11 @@ the grid and decides execution order:
 * **size-aware batching** — consecutive queued requests of the *same*
   workload are coalesced (up to ``max_batch_requests`` / ``max_batch_bytes``)
   and streamed through a single chunk pipeline, so the banks never drain
-  between them (``pipeline.run_pipelined_many``).
+  between them (``pipeline.run_pipelined_many``);
+* **tuned plans** — per-workload chunk counts and batch sizes may come from
+  the characterization-driven autotuner (``runtime.autotune``, DESIGN.md §8)
+  via ``plans=`` or :meth:`PimScheduler.autotuned`; workloads without a plan
+  keep the constructor constants as the untuned fallback.
 
 The workload set comes from :mod:`repro.prim.registry`: every registry entry
 is servable.  Pipelineable entries run through the chunk pipeline;
@@ -33,11 +37,12 @@ from __future__ import annotations
 import heapq
 import itertools
 import threading
-from typing import TYPE_CHECKING, Any, Sequence
+from typing import TYPE_CHECKING, Any, Mapping, Sequence
 
 import numpy as np
 
 from repro.core.banked import BankGrid
+from repro.core.transfer import tree_nbytes as _nbytes
 
 from .pipeline import run_pipelined_many
 from .telemetry import RequestRecord, Telemetry, now
@@ -45,9 +50,7 @@ from .telemetry import RequestRecord, Telemetry, now
 if TYPE_CHECKING:  # annotation-only: importing repro.prim pulls the suite
     from repro.prim import common
 
-
-def _nbytes(args) -> int:
-    return sum(a.nbytes for a in args if isinstance(a, np.ndarray))
+    from .autotune import TunedPlan
 
 
 def _nitems(args) -> int:
@@ -93,11 +96,16 @@ class PimScheduler:
                  max_batch_requests: int = 8,
                  max_batch_bytes: int = 256 << 20,
                  workloads: dict[str, common.ChunkedWorkload] | None = None,
+                 plans: Mapping[str, TunedPlan] | None = None,
                  telemetry: Telemetry | None = None):
         self.grid = grid
         self.n_chunks = n_chunks
         self.max_batch_requests = max_batch_requests
         self.max_batch_bytes = max_batch_bytes
+        #: per-workload TunedPlan overrides (chunk count + batch size) from
+        #: runtime.autotune; workloads without a plan keep the constants
+        #: above as the untuned fallback
+        self.plans: dict[str, TunedPlan] = dict(plans or {})
         self.serialized: dict[str, Any] = {}
         if workloads is None:
             from repro.prim import registry   # lazy: pulls the whole suite
@@ -115,6 +123,16 @@ class PimScheduler:
         self._cv = threading.Condition()
         self._thread: threading.Thread | None = None
         self._stopping = False
+
+    @classmethod
+    def autotuned(cls, grid: BankGrid, *, scale: int = 1, probe: bool = True,
+                  **kwargs) -> "PimScheduler":
+        """Calibrate the backend and construct a scheduler whose per-workload
+        chunk counts and batch sizes come from the fitted model
+        (runtime.autotune, DESIGN.md §8) instead of the constants above."""
+        from .autotune import autotune
+        result = autotune(grid, scale=scale, probe=probe)
+        return cls(grid, plans=result.plans, **kwargs)
 
     # -- submission -----------------------------------------------------------
 
@@ -146,11 +164,14 @@ class PimScheduler:
         request ahead of it, violating the priority/FIFO guarantee."""
         order = sorted(self._queue)            # priority/FIFO order
         head = order[0][2]
+        plan = self.plans.get(head.workload)
+        max_requests = (plan.max_batch_requests if plan is not None
+                        else self.max_batch_requests)
         batch, nbytes = [head], head.record.bytes_in
         for entry in order[1:]:
             req = entry[2]
             if (req.workload != head.workload
-                    or len(batch) >= self.max_batch_requests
+                    or len(batch) >= max_requests
                     or nbytes + req.record.bytes_in > self.max_batch_bytes):
                 break
             batch.append(req)
@@ -194,6 +215,7 @@ class PimScheduler:
             results = run_pipelined_many(
                 self.grid, self.workloads[batch[0].workload],
                 [r.args for r in batch], n_chunks=self.n_chunks,
+                plan=self.plans.get(batch[0].workload),
                 records=records)
         except BaseException as e:                # noqa: BLE001 — forwarded
             if len(batch) == 1:

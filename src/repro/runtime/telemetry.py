@@ -48,6 +48,8 @@ class RequestRecord:
     t_finish: float = 0.0
     phases: "PhaseTimes" = dataclasses.field(default_factory=_phases)
     serialized_s: float = 0.0   # optional: measured pim() baseline time
+    predicted_overlap: float = 0.0   # autotune plan's promise (0 = untuned)
+    tuned: bool = False              # served under a TunedPlan?
 
     @property
     def queue_wait(self) -> float:
@@ -70,6 +72,16 @@ class RequestRecord:
         return 0.0
 
     @property
+    def overlap_misprediction(self) -> float:
+        """predicted/achieved − 1: positive ⇒ the autotune model
+        over-promised, negative ⇒ it under-promised; 0.0 when either side is
+        missing.  Surfaced per request so a drifting fit is visible in every
+        bench artifact instead of silently mis-tuning (DESIGN.md §8)."""
+        if self.predicted_overlap and self.overlap_speedup:
+            return self.predicted_overlap / self.overlap_speedup - 1.0
+        return 0.0
+
+    @property
     def achieved_gbps(self) -> float:
         moved = self.bytes_in + self.bytes_out
         return moved / self.service_s / 1e9 if self.service_s else 0.0
@@ -85,6 +97,9 @@ class RequestRecord:
                 "inter_dpu_s": self.phases.inter_dpu,
                 "dpu_cpu_s": self.phases.dpu_cpu,
                 "overlap_speedup": self.overlap_speedup,
+                "tuned": self.tuned,
+                "predicted_overlap": self.predicted_overlap,
+                "overlap_misprediction": self.overlap_misprediction,
                 "achieved_gbps": self.achieved_gbps}
 
 
@@ -110,6 +125,8 @@ class Telemetry:
         moved = sum(r.bytes_in + r.bytes_out for r in self.records)
         speedups = [r.overlap_speedup for r in self.records
                     if r.overlap_speedup > 0]
+        mispred = [r.overlap_misprediction for r in self.records
+                   if r.predicted_overlap and r.overlap_speedup]
         return {
             "requests": n,
             "wall_s": wall,
@@ -120,6 +137,9 @@ class Telemetry:
             "aggregate_gbps": moved / wall / 1e9,
             "mean_overlap_speedup": (sum(speedups) / len(speedups)
                                      if speedups else 0.0),
+            "tuned_requests": sum(r.tuned for r in self.records),
+            "mean_overlap_misprediction": (sum(mispred) / len(mispred)
+                                           if mispred else 0.0),
         }
 
     def rows(self, n_banks: int, table: str = "runtime_requests") -> list:

@@ -1,0 +1,146 @@
+"""Bench artifact layer: tools/bench.py produces a schema-valid document
+that survives a JSON round trip, tools/check_bench.py validates schemas and
+catches regressions, and the committed BENCH_PR3.json baseline is valid."""
+import json
+import os
+import pathlib
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+sys.path.insert(0, str(ROOT))
+
+import check_bench  # noqa: E402
+from bench import collect  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def doc(bank_grid):
+    """One small live bench run: a pipelineable + a serialized-only entry."""
+    return collect(grid=bank_grid, workloads=["VA", "NW"], n_requests=2,
+                   scale=1, smoke=True, pr_tag="test")
+
+
+def test_collect_is_schema_valid(doc):
+    assert check_bench.validate(doc) == []
+
+
+def test_collect_round_trips_through_json(doc):
+    restored = json.loads(json.dumps(doc))
+    assert check_bench.validate(restored) == []
+    assert restored["workloads"].keys() == doc["workloads"].keys()
+
+
+def test_collect_contents(doc, bank_grid):
+    assert doc["schema"] == check_bench.SCHEMA
+    assert doc["env"]["n_devices"] >= 1
+    assert doc["settings"]["banks"] == bank_grid.n_banks
+    assert doc["settings"]["pr_tag"] == "test"
+    va, nw = doc["workloads"]["VA"], doc["workloads"]["NW"]
+    assert va["pipelineable"] and not nw["pipelineable"]
+    assert nw["reason"]                      # registry reason rides along
+    assert va["tuned"]["overlap_speedup"] >= va["fixed"]["overlap_speedup"]
+    assert "plans" in doc["model"] and "VA" in doc["model"]["plans"]
+    assert doc["micro"] and doc["scaling"]
+
+
+def test_compare_identical_passes(doc):
+    assert check_bench.compare(doc, doc) == []
+
+
+def test_compare_detects_speedup_regression(doc):
+    cur = json.loads(json.dumps(doc))
+    cur["workloads"]["VA"]["tuned"]["overlap_speedup"] *= 0.5
+    errs = check_bench.compare(doc, cur)
+    assert errs and any("tuned.overlap_speedup" in e for e in errs)
+
+
+def test_compare_ratio_gate_is_env_scoped(doc):
+    """A dev-machine baseline must not fail a different runner on speedup
+    ratios — but structural gates still apply, and --force-ratio restores
+    the numeric gate."""
+    cur = json.loads(json.dumps(doc))
+    cur["env"]["platform"] = "other-machine"
+    cur["workloads"]["VA"]["tuned"]["overlap_speedup"] *= 0.5
+    notes = []
+    assert check_bench.compare(doc, cur, notes=notes) == []
+    assert notes and "environments differ" in notes[0]
+    assert any("tuned.overlap_speedup" in e
+               for e in check_bench.compare(doc, cur, force_ratio=True))
+    del cur["workloads"]["VA"]          # structure still gates cross-env
+    assert any("missing in current" in e
+               for e in check_bench.compare(doc, cur))
+
+
+def test_compare_within_threshold_passes(doc):
+    cur = json.loads(json.dumps(doc))
+    cur["workloads"]["VA"]["tuned"]["overlap_speedup"] *= 0.9  # < 25% drop
+    cur["workloads"]["VA"]["fixed"]["overlap_speedup"] *= 0.9
+    assert check_bench.compare(doc, cur) == []
+
+
+def test_compare_detects_missing_workload(doc):
+    cur = json.loads(json.dumps(doc))
+    del cur["workloads"]["VA"]
+    errs = check_bench.compare(doc, cur)
+    assert any("missing in current" in e for e in errs)
+
+
+def test_compare_detects_pipelineable_downgrade(doc):
+    cur = json.loads(json.dumps(doc))
+    cur["workloads"]["VA"] = {"pipelineable": False, "reason": "broke",
+                              "serialized_s": 1.0, "serialized_rps": 1.0}
+    errs = check_bench.compare(doc, cur)
+    assert any("now serialized-only" in e for e in errs)
+
+
+def test_strict_timing_gate(doc):
+    cur = json.loads(json.dumps(doc))
+    cur["workloads"]["VA"]["tuned"]["pipelined_s"] *= 10.0
+    assert check_bench.compare(doc, cur) == []        # ratios-only default
+    errs = check_bench.compare(doc, cur, strict_timing=True)
+    assert any("tuned.pipelined_s" in e for e in errs)
+
+
+def test_validate_rejects_wrong_schema(doc):
+    bad = json.loads(json.dumps(doc))
+    bad["schema"] = "repro-bench/0"
+    assert any("schema" in e for e in check_bench.validate(bad))
+
+
+def test_validate_enforces_tuned_beats_or_ties_fixed(doc):
+    bad = json.loads(json.dumps(doc))
+    bad["workloads"]["VA"]["tuned"]["overlap_speedup"] = (
+        bad["workloads"]["VA"]["fixed"]["overlap_speedup"] * 0.5)
+    assert any("beat or tie" in e for e in check_bench.validate(bad))
+
+
+def test_check_bench_cli(doc, tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps(doc))
+    assert check_bench.main([str(p)]) == 0
+    assert check_bench.main([str(p), str(p)]) == 0
+    bad = json.loads(json.dumps(doc))
+    bad["workloads"]["VA"]["tuned"]["overlap_speedup"] *= 0.1
+    q = tmp_path / "bad.json"
+    q.write_text(json.dumps(bad))
+    assert check_bench.main([str(p), str(q)]) == 1
+
+
+# -- the committed baseline CI gates against ----------------------------------
+
+def test_committed_baseline_is_valid():
+    path = ROOT / "BENCH_PR3.json"
+    assert path.exists(), "BENCH_PR3.json baseline missing from repo root"
+    base = json.loads(path.read_text())
+    assert check_bench.validate(base) == []
+    # generated at the CI bench-smoke shape: 8 simulated banks, full registry
+    assert base["settings"]["banks"] == 8
+    from repro.prim.registry import REGISTRY
+    assert set(base["workloads"]) == set(REGISTRY)
+    for name, w in base["workloads"].items():
+        if w["pipelineable"]:
+            assert (w["tuned"]["overlap_speedup"]
+                    >= w["fixed"]["overlap_speedup"] - 1e-9), name

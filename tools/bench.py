@@ -1,0 +1,178 @@
+#!/usr/bin/env python
+"""Unified benchmark harness — one CLI, one schema-versioned JSON artifact.
+
+Wraps the three benchmark drivers behind a single entry point and emits a
+machine-readable ``BENCH_*.json`` (EXPERIMENTS.md §Bench-artifacts):
+
+* ``benchmarks/throughput.py`` — serialized ``pim()`` vs fixed-chunk vs
+  autotuned pipeline for the full registry (the tuned plans come from
+  ``repro.runtime.autotune``, DESIGN.md §8; the fitted model parameters are
+  embedded in the artifact);
+* ``benchmarks/prim_scaling.py`` — strong-scaling phase breakdown;
+* ``benchmarks/microbench.py`` — the characterization slice (model vs
+  measured backend limits).
+
+The artifact is what CI uploads and gates on: ``tools/check_bench.py``
+validates its schema and compares it against the committed baseline.
+``--smoke`` keeps everything CI-sized (small scale, few requests, the
+characterization slice only).
+
+    PYTHONPATH=src python tools/bench.py --smoke --banks 8 --out BENCH_PR3.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import platform
+import subprocess
+import sys
+
+_HERE = pathlib.Path(__file__).resolve().parent
+sys.path.insert(0, str(_HERE.parent / "src"))
+sys.path.insert(0, str(_HERE.parent))
+sys.path.insert(0, str(_HERE))
+
+from check_bench import SCHEMA, validate  # noqa: E402
+
+from repro.runtime.autotune import DEFAULT_N_CHUNKS  # noqa: E402
+
+
+def env_info() -> dict:
+    import jax
+    import numpy as np
+    devs = jax.devices()
+    return {
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "numpy": np.__version__,
+        "platform": platform.platform(),
+        "n_devices": len(devs),
+        "device_kind": devs[0].device_kind if devs else "none",
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+    }
+
+
+def _workload_doc(row: dict, entry) -> dict:
+    d = {
+        "pipelineable": row["pipelineable"] == "yes",
+        "section": entry.section,
+        "serialized_s": row["serialized_s"],
+        "serialized_rps": row["serialized_rps"],
+    }
+    if not d["pipelineable"]:
+        d["reason"] = entry.reason
+        return d
+    d["fixed"] = {
+        "n_chunks": row["chunks"],
+        "pipelined_s": row["pipelined_s"],
+        "overlap_speedup": row["overlap_speedup"],
+    }
+    d["tuned"] = {
+        "n_chunks": row["tuned_chunks"],
+        "max_batch_requests": row["tuned_batch"],
+        "pipelined_s": row["tuned_s"],
+        "overlap_speedup": row["tuned_speedup"],
+        "predicted_overlap": row["predicted_overlap"],
+        "adopted": row["adopted"],
+    }
+    return d
+
+
+def collect(grid=None, workloads=None, *, n_requests: int = 6,
+            scale: int = 2, smoke: bool = False,
+            pr_tag: str | None = None) -> dict:
+    """Run the suites and assemble the artifact document."""
+    from benchmarks import microbench as mb
+    from benchmarks import prim_scaling as ps
+    from benchmarks.throughput import throughput
+    from repro.core import make_bank_grid
+    from repro.prim.registry import REGISTRY
+    from repro.runtime import autotune
+
+    grid = grid or make_bank_grid()
+    names = list(workloads or REGISTRY)
+    entries = [REGISTRY[n] for n in names]
+
+    tuning = autotune(grid, [e for e in entries if e.pipelineable],
+                      scale=scale, reps=2 if smoke else 3)
+    rows = throughput(workloads=names, n_requests=n_requests, scale=scale,
+                      n_chunks=DEFAULT_N_CHUNKS, tuning=tuning, grid=grid)
+
+    doc = {
+        "schema": SCHEMA,
+        "env": env_info(),
+        "settings": {"pr_tag": pr_tag, "smoke": smoke,
+                     "banks": grid.n_banks, "n_requests": n_requests,
+                     "scale": scale, "default_n_chunks": DEFAULT_N_CHUNKS},
+        "model": tuning.as_dict(),
+        "workloads": {row["workload"]: _workload_doc(row, REGISTRY[
+            row["workload"]]) for row in rows},
+        "micro": mb.smoke(grid) if smoke else [
+            r for fig in mb.ALL for r in
+            (fig(fast=True) if fig is mb.fig4_arith_throughput else fig())],
+        "scaling": ps.strong_scaling(
+            bank_counts=sorted({1, grid.n_banks}),
+            scale=1 if smoke else 4,
+            workloads=("VA", "GEMV") if smoke else None),
+    }
+    return doc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--banks", type=int, default=0,
+                    help="re-exec with N forced host devices")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: small scale, few requests, "
+                         "characterization slice only")
+    ap.add_argument("--out", default="BENCH.json",
+                    help="artifact path (e.g. BENCH_PR3.json)")
+    ap.add_argument("--pr-tag", default=None,
+                    help="free-form tag recorded in settings.pr_tag")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--scale", type=int, default=None)
+    ap.add_argument("--workloads", nargs="*", default=None,
+                    help="subset of registry names (default: full registry)")
+    args = ap.parse_args(argv)
+
+    if args.banks:
+        env = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_"
+                                         f"count={args.banks}")
+        cmd = [sys.executable, str(_HERE / "bench.py"), "--out", args.out]
+        if args.smoke:
+            cmd.append("--smoke")
+        if args.pr_tag:
+            cmd += ["--pr-tag", args.pr_tag]
+        if args.requests is not None:
+            cmd += ["--requests", str(args.requests)]
+        if args.scale is not None:
+            cmd += ["--scale", str(args.scale)]
+        if args.workloads:
+            cmd += ["--workloads", *args.workloads]
+        return subprocess.call(cmd, env=env)
+
+    n_requests = args.requests if args.requests is not None \
+        else (3 if args.smoke else 6)
+    scale = args.scale if args.scale is not None else (1 if args.smoke else 2)
+    doc = collect(workloads=args.workloads, n_requests=n_requests,
+                  scale=scale, smoke=args.smoke, pr_tag=args.pr_tag)
+
+    errors = validate(doc)
+    if errors:
+        print("bench: refusing to write a schema-invalid artifact:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    n_tuned = sum(1 for w in doc["workloads"].values()
+                  if w.get("tuned", {}).get("adopted") == "tuned")
+    print(f"bench: wrote {out} — {len(doc['workloads'])} workloads, "
+          f"{n_tuned} with an adopted tuned plan, schema {SCHEMA}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,236 @@
+#!/usr/bin/env python
+"""Bench-artifact schema validation + regression gate (CI).
+
+Validates the schema of a ``BENCH_*.json`` produced by ``tools/bench.py``
+and compares a current artifact against a committed baseline, failing on
+regression — the machine-readable contract that makes PIM benchmark results
+comparable across PRs (EXPERIMENTS.md §Bench-artifacts; the reproducibility
+argument of arXiv:2110.01709 / arXiv:2205.14647).
+
+Two layers:
+
+* ``validate(doc)`` — structural schema check, plus the tuned-pipeline
+  invariant the artifact must carry: for every pipelineable workload the
+  tuned overlap speedup is >= the fixed-chunk baseline's (ties allowed) —
+  the autotuner's probe guarantees it at generation time, this guards the
+  committed file.
+* ``compare(base, cur)`` — per-workload gate.  Structural checks (coverage,
+  pipelineability, the tuned>=fixed invariant) always apply.  Numeric gates
+  are environment-scoped: overlap-speedup ratios only gate when the two
+  artifacts share an environment fingerprint (platform / device count /
+  device kind — a dev-machine baseline must not fail CI runners on hardware
+  differences; ``--force-ratio`` overrides), and absolute timings only gate
+  under ``--strict-timing`` (same-machine diffs).
+
+    python tools/check_bench.py BENCH_PR3.json BENCH_ci.json [--threshold 0.25]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import sys
+
+SCHEMA = "repro-bench/1"
+
+#: relative drop in overlap speedup (or rise in time, with --strict-timing)
+#: tolerated before the gate fails
+DEFAULT_THRESHOLD = 0.25
+
+_TIE_EPS = 1e-9
+
+
+def _finite_pos(x) -> bool:
+    return isinstance(x, (int, float)) and math.isfinite(x) and x > 0
+
+
+def _check_stage(fit, where: str, errors: list[str]) -> None:
+    if not isinstance(fit, dict):
+        errors.append(f"{where}: stage fit must be an object")
+        return
+    a, bw = fit.get("alpha_s"), fit.get("bytes_per_s")
+    if not (isinstance(a, (int, float)) and math.isfinite(a) and a >= 0):
+        errors.append(f"{where}.alpha_s: want finite >= 0, got {a!r}")
+    if not _finite_pos(bw):
+        errors.append(f"{where}.bytes_per_s: want finite > 0, got {bw!r}")
+
+
+def _check_run(run, where: str, errors: list[str],
+               tuned: bool = False) -> None:
+    if not isinstance(run, dict):
+        errors.append(f"{where}: must be an object")
+        return
+    for key in ("n_chunks",) + (("max_batch_requests",) if tuned else ()):
+        v = run.get(key)
+        if not (isinstance(v, int) and v >= 1):
+            errors.append(f"{where}.{key}: want int >= 1, got {v!r}")
+    for key in ("pipelined_s", "overlap_speedup"):
+        if not _finite_pos(run.get(key)):
+            errors.append(f"{where}.{key}: want finite > 0, "
+                          f"got {run.get(key)!r}")
+
+
+def validate(doc) -> list[str]:
+    """Structural schema check; returns a list of errors (empty = valid)."""
+    errors: list[str] = []
+    if not isinstance(doc, dict):
+        return ["artifact must be a JSON object"]
+    if doc.get("schema") != SCHEMA:
+        errors.append(f"schema: want {SCHEMA!r}, got {doc.get('schema')!r}")
+    for key in ("env", "settings", "model", "workloads"):
+        if not isinstance(doc.get(key), dict):
+            errors.append(f"missing or non-object top-level key {key!r}")
+    if errors:
+        return errors
+
+    env = doc["env"]
+    for key in ("python", "jax", "platform"):
+        if not isinstance(env.get(key), str):
+            errors.append(f"env.{key}: want string, got {env.get(key)!r}")
+    if not (isinstance(env.get("n_devices"), int) and env["n_devices"] >= 1):
+        errors.append(f"env.n_devices: want int >= 1, "
+                      f"got {env.get('n_devices')!r}")
+
+    stages = doc["model"].get("stages", {})
+    for stage in ("push", "compute", "pull"):
+        if stage not in stages:
+            errors.append(f"model.stages missing {stage!r}")
+        else:
+            _check_stage(stages[stage], f"model.stages.{stage}", errors)
+
+    if not doc["workloads"]:
+        errors.append("workloads: must be non-empty")
+    for name, w in doc["workloads"].items():
+        where = f"workloads.{name}"
+        if not isinstance(w, dict):
+            errors.append(f"{where}: must be an object")
+            continue
+        if not isinstance(w.get("pipelineable"), bool):
+            errors.append(f"{where}.pipelineable: want bool")
+            continue
+        if not _finite_pos(w.get("serialized_s")):
+            errors.append(f"{where}.serialized_s: want finite > 0, "
+                          f"got {w.get('serialized_s')!r}")
+        if not w["pipelineable"]:
+            if not w.get("reason"):
+                errors.append(f"{where}: serialized-only entries must carry "
+                              f"the registry's reason")
+            continue
+        _check_run(w.get("fixed"), f"{where}.fixed", errors)
+        _check_run(w.get("tuned"), f"{where}.tuned", errors, tuned=True)
+        fixed, tuned = w.get("fixed"), w.get("tuned")
+        if (isinstance(fixed, dict) and isinstance(tuned, dict)
+                and _finite_pos(fixed.get("overlap_speedup"))
+                and _finite_pos(tuned.get("overlap_speedup"))
+                and tuned["overlap_speedup"]
+                < fixed["overlap_speedup"] - _TIE_EPS):
+            errors.append(
+                f"{where}: tuned overlap_speedup "
+                f"{tuned['overlap_speedup']:.3f} < fixed "
+                f"{fixed['overlap_speedup']:.3f} — the tuned plan must beat "
+                f"or tie the fixed-chunk baseline")
+    return errors
+
+
+def env_fingerprint(doc: dict) -> tuple:
+    """What must match for numeric gates to be meaningful across artifacts."""
+    env = doc.get("env", {})
+    return (env.get("platform"), env.get("n_devices"),
+            env.get("device_kind"))
+
+
+def compare(base: dict, cur: dict, threshold: float = DEFAULT_THRESHOLD,
+            strict_timing: bool = False, force_ratio: bool = False,
+            notes: list | None = None) -> list[str]:
+    """Regression gate: current artifact vs committed baseline."""
+    errors = [f"baseline: {e}" for e in validate(base)]
+    errors += [f"current: {e}" for e in validate(cur)]
+    if errors:
+        return errors
+
+    same_env = env_fingerprint(base) == env_fingerprint(cur)
+    gate_ratios = same_env or force_ratio
+    if not gate_ratios and notes is not None:
+        notes.append(
+            f"environments differ ({env_fingerprint(base)} vs "
+            f"{env_fingerprint(cur)}): gating structure/invariants only; "
+            f"pass --force-ratio to gate speedup ratios anyway")
+
+    def ratio_gate(name: str, metric: str, b: float, c: float) -> None:
+        if gate_ratios and c < b * (1.0 - threshold):
+            errors.append(
+                f"{name}: {metric} regressed {b:.3f} -> {c:.3f} "
+                f"(> {threshold:.0%} drop)")
+
+    def time_gate(name: str, metric: str, b: float, c: float) -> None:
+        if strict_timing and c > b * (1.0 + threshold):
+            errors.append(
+                f"{name}: {metric} regressed {b:.4f}s -> {c:.4f}s "
+                f"(> {threshold:.0%} slower)")
+
+    for name, bw in base["workloads"].items():
+        cw = cur["workloads"].get(name)
+        if cw is None:
+            errors.append(f"{name}: present in baseline, missing in current")
+            continue
+        if bw["pipelineable"] and not cw["pipelineable"]:
+            errors.append(f"{name}: was pipelineable in baseline, now "
+                          f"serialized-only")
+            continue
+        time_gate(name, "serialized_s", bw["serialized_s"],
+                  cw["serialized_s"])
+        if not bw["pipelineable"]:
+            continue
+        for run in ("fixed", "tuned"):
+            ratio_gate(name, f"{run}.overlap_speedup",
+                       bw[run]["overlap_speedup"],
+                       cw[run]["overlap_speedup"])
+            time_gate(name, f"{run}.pipelined_s", bw[run]["pipelined_s"],
+                      cw[run]["pipelined_s"])
+    return errors
+
+
+def load(path: str) -> dict:
+    return json.loads(pathlib.Path(path).read_text())
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed BENCH_*.json to gate against")
+    ap.add_argument("current", nargs="?", default=None,
+                    help="fresh artifact; omit to only validate the baseline")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="tolerated relative regression (default 0.25)")
+    ap.add_argument("--strict-timing", action="store_true",
+                    help="also gate absolute timings (same-machine runs "
+                         "only: wall times are not comparable across "
+                         "runners)")
+    ap.add_argument("--force-ratio", action="store_true",
+                    help="gate speedup ratios even when the artifacts' "
+                         "environment fingerprints differ")
+    args = ap.parse_args(argv)
+
+    notes: list[str] = []
+    if args.current is None:
+        errors = validate(load(args.baseline))
+        label = f"validate {args.baseline}"
+    else:
+        errors = compare(load(args.baseline), load(args.current),
+                         threshold=args.threshold,
+                         strict_timing=args.strict_timing,
+                         force_ratio=args.force_ratio, notes=notes)
+        label = f"compare {args.baseline} vs {args.current}"
+    for n in notes:
+        print(f"bench-check note: {n}")
+    if errors:
+        print(f"bench-check FAILED ({label}):")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"bench-check OK ({label})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,10 +2,10 @@
 """Docs-consistency check (CI gate).
 
 Fails if:
-  * any `DESIGN.md §<sec>` / `EXPERIMENTS.md §<sec>` reference in `src/`
-    cites a file or section heading that does not exist
-    (continuations like "EXPERIMENTS.md §Dry-run and §Roofline" count,
-    and the § may land on the next line of a wrapped docstring);
+  * any `DESIGN.md §<sec>` / `EXPERIMENTS.md §<sec>` reference in `src/`,
+    `tools/`, or `benchmarks/` cites a file or section heading that does
+    not exist (continuations like "EXPERIMENTS.md §Dry-run and §Roofline"
+    count, and the § may land on the next line of a wrapped docstring);
   * any file mentioning DESIGN.md / EXPERIMENTS.md exists while the cited
     doc is missing from the repo root;
   * README.md's workload table is stale (it is generated:
@@ -51,16 +51,18 @@ def check_ref(doc: str, sec: str, where: str) -> None:
 
 
 def scan_sources() -> None:
-    for py in sorted((ROOT / "src").rglob("*.py")):
-        text = py.read_text()
-        rel = py.relative_to(ROOT)
-        for m in REF.finditer(text):
-            doc = f"{m.group(1)}.md"
-            if not (ROOT / doc).exists():
-                errors.append(f"{rel}: mentions {doc}, which does not exist")
-                continue
-            for sec in TOKEN.findall(m.group(2) or ""):
-                check_ref(doc, sec, str(rel))
+    for tree in ("src", "tools", "benchmarks"):
+        for py in sorted((ROOT / tree).rglob("*.py")):
+            text = py.read_text()
+            rel = py.relative_to(ROOT)
+            for m in REF.finditer(text):
+                doc = f"{m.group(1)}.md"
+                if not (ROOT / doc).exists():
+                    errors.append(f"{rel}: mentions {doc}, "
+                                  f"which does not exist")
+                    continue
+                for sec in TOKEN.findall(m.group(2) or ""):
+                    check_ref(doc, sec, str(rel))
 
 
 def check_readme() -> None:
