@@ -118,8 +118,9 @@ def fig9_roofline():
 
 
 def fig10_transfers(grid=None):
-    from repro.core import make_bank_grid
-    grid = grid or make_bank_grid()
+    from repro import pim
+    sess = pim.PimSession(grid=grid)      # grid=None -> allocate one
+    grid = sess.grid
     rows = []
     for r in ch.transfer_sweep(grid, mb_per_bank=2):
         kind = r["kind"]
@@ -130,6 +131,7 @@ def fig10_transfers(grid=None):
         rows.append({"table": "fig10", "kind": kind, "banks": r["banks"],
                      "dpu_model_gbps": model / 1e9,
                      "measured_backend_gbps": r["gbps"]})
+    sess.close()
     return rows
 
 

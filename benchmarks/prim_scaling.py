@@ -10,8 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import make_bank_grid
-from repro.prim.registry import REGISTRY
+from repro import pim
 
 
 def _workloads(scale: int, labels=None):
@@ -21,7 +20,7 @@ def _workloads(scale: int, labels=None):
     *before* argument generation (bench --smoke runs a subset)."""
     rng = np.random.default_rng(0)
     runs = {}
-    for entry in REGISTRY.values():
+    for entry in pim.registry().values():
         variants = {label: fn for label, fn in entry.run_variants().items()
                     if not labels or label in labels}
         if not variants:
@@ -37,10 +36,11 @@ def strong_scaling(bank_counts=(1,), scale: int = 4, workloads=None):
     ``workloads`` restricts to a subset of registry names (bench --smoke)."""
     rows = []
     for nb in bank_counts:
-        grid = make_bank_grid(nb)
+        sess = pim.session(banks=nb)
         for name, fn in _workloads(scale=scale, labels=workloads).items():
-            _, t = fn(grid)
+            _, t = fn(sess.grid)
             rows.append({"table": "fig13_strong", **t.row(name, nb)})
+        sess.close()
     return rows
 
 
@@ -48,11 +48,12 @@ def weak_scaling(bank_counts=(1,), base_scale: int = 1, workloads=None):
     """Fig. 15 analogue: fixed problem *per bank*."""
     rows = []
     for nb in bank_counts:
-        grid = make_bank_grid(nb)
+        sess = pim.session(banks=nb)
         for name, fn in _workloads(scale=base_scale * nb,
                                    labels=workloads).items():
-            _, t = fn(grid)
+            _, t = fn(sess.grid)
             rows.append({"table": "fig15_weak", **t.row(name, nb)})
+        sess.close()
     return rows
 
 

@@ -89,12 +89,14 @@ def run_cell_subprocess(arch: str, shape: str, opt: str = "",
         return json.load(f)
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Roofline table from dry-run records "
+                    "(EXPERIMENTS.md §Roofline)")
     ap.add_argument("--mesh", default="16x16")
     ap.add_argument("--cell", default=None, help="arch:shape to re-run")
     ap.add_argument("--opt", default="", help="comma-joined opt flags")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     if args.cell:
         arch, shape = args.cell.split(":")

@@ -14,7 +14,6 @@ import time
 
 import numpy as np
 
-from repro import prim
 from repro.core.perfmodel import DpuSystemModel, TpuModel
 
 SYS = DpuSystemModel()
@@ -51,10 +50,12 @@ SYNC_LATENCY = 0.25e-3    # one host round-trip (launch + retrieve)
 
 def _check_registry_coverage() -> None:
     """The WORKLOADS constants are per-workload model *data* (Table 2 mixes),
-    but which workloads exist is the registry's call: fail loudly if the two
-    ever drift apart (lazy import — the registry pulls the whole suite)."""
-    from repro.prim.registry import REGISTRY
-    labels = {label for e in REGISTRY.values() for label in e.run_variants()}
+    but which workloads exist is the session façade's registry view's call:
+    fail loudly if the two ever drift apart (lazy import — the registry
+    pulls the whole suite)."""
+    from repro import pim
+    labels = {label for e in pim.registry().values()
+              for label in e.run_variants()}
     if set(WORKLOADS) != labels:
         raise AssertionError(
             f"system_compare.WORKLOADS out of sync with prim.registry: "

@@ -3,10 +3,10 @@ scheduler (requests/sec and overlap speedup), for the FULL registry.
 
 The serialized column reproduces the paper's execution model — every request
 runs scatter | compute | retrieve with hard syncs, one after another.  The
-pipelined column submits the same requests to ``PimScheduler``, which chunks,
-double-buffers, and batches them (``runtime/pipeline.py``).  The ratio is the
-transfer time the UPMEM SDK's serialization leaves on the table (§5 stacked
-bars; arXiv:2110.01709 makes the same argument).
+pipelined column submits the same requests to a `repro.pim` session, which
+chunks, double-buffers, and batches them (``runtime/pipeline.py``).  The
+ratio is the transfer time the UPMEM SDK's serialization leaves on the
+table (§5 stacked bars; arXiv:2110.01709 makes the same argument).
 
 With a :class:`~repro.runtime.autotune.TuningResult` (``--tuned``), a third
 column serves the same requests under the autotuner's per-workload plans:
@@ -40,39 +40,44 @@ import numpy as np
 
 def _sched_run(grid, entry, args_list, *, n_chunks, plan=None,
                serialized_per_req=0.0):
-    """One scheduler-level measurement: warm (first batch pays compilation
-    for this chunk shape), then time submit→drain→results end-to-end."""
-    from repro.runtime import PimScheduler
+    """One scheduler-level measurement through a deterministic PimSession
+    sharing the caller's grid (and its compiled phase cache): warm (first
+    batch pays compilation for this chunk shape), then time
+    submit→drain→results end-to-end."""
+    from repro.pim import PimSession
 
     plans = {entry.name: plan} if plan is not None else None
-    sched = PimScheduler(grid, n_chunks=n_chunks, plans=plans)
-    warm = sched.submit(entry.name, *args_list[0])
-    sched.drain()
+    sess = PimSession(grid=grid, n_chunks=n_chunks, plans=plans)
+    warm = sess.submit(entry.name, *args_list[0])
+    sess.drain()
     warm.result()
-    sched.telemetry.records.clear()
+    sess.telemetry.records.clear()
 
     t0 = time.perf_counter()
-    reqs = [sched.submit(entry.name, *args) for args in args_list]
-    sched.drain()
+    reqs = [sess.submit(entry.name, *args) for args in args_list]
+    sess.drain()
     outs = [r.result() for r in reqs]
     dt = time.perf_counter() - t0
     if serialized_per_req:
         for r in reqs:
             r.record.serialized_s = serialized_per_req
-    return outs, dt, sched
+    sess.close()       # dpu_free; telemetry/plans stay readable
+    return outs, dt, sess
 
 
 def throughput(workloads=None, n_requests: int = 6, n_chunks: int = 4,
                scale: int = 2, check: bool = True, tuning=None, grid=None):
     """Rows for the ``runtime_throughput`` table.  ``tuning`` (a
     ``TuningResult``) adds the tuned columns; ``grid`` reuses a caller's
-    BankGrid (and its compiled phase cache) instead of making one."""
-    from repro.core import make_bank_grid
-    from repro.prim.registry import REGISTRY
+    BankGrid (and its compiled phase cache) instead of allocating one
+    through a fresh ``pim.session()``."""
+    from repro import pim
     from repro.runtime.autotune import probe_candidates
 
-    grid = grid or make_bank_grid()
-    entries = [REGISTRY[name] for name in (workloads or REGISTRY)]
+    registry = pim.registry()
+    own = pim.PimSession(grid=grid)       # grid=None -> allocate one
+    grid = own.grid
+    entries = [registry[name] for name in (workloads or registry)]
     rng = np.random.default_rng(0)
     rows = []
     for e in entries:
@@ -102,14 +107,14 @@ def throughput(workloads=None, n_requests: int = 6, n_chunks: int = 4,
             continue
 
         per_req = serialized_s / n_requests
-        pipe_out, pipelined_s, sched = _sched_run(
+        pipe_out, pipelined_s, sess = _sched_run(
             grid, e, args_list, n_chunks=n_chunks,
             serialized_per_req=per_req)
         if check:
             for s, p in zip(serial_out, pipe_out):
                 e.compare(p, s)
 
-        agg = sched.telemetry.aggregate()
+        agg = sess.stats()
         row.update({
             "pipelined_s": pipelined_s,
             "pipelined_rps": n_requests / pipelined_s,
@@ -136,7 +141,8 @@ def throughput(workloads=None, n_requests: int = 6, n_chunks: int = 4,
                 tuned_batch, adopted = plan.max_batch_requests, "tuned"
             else:    # the untuned default measured best: fall back to it
                 tuned_s, tuned_chunks = pipelined_s, n_chunks
-                tuned_batch, adopted = sched.max_batch_requests, "default"
+                tuned_batch, adopted = \
+                    sess.scheduler.max_batch_requests, "default"
             row.update({
                 "tuned_s": tuned_s,
                 "tuned_rps": n_requests / tuned_s,
@@ -147,6 +153,7 @@ def throughput(workloads=None, n_requests: int = 6, n_chunks: int = 4,
                 "adopted": adopted,
             })
         rows.append(row)
+    own.close()
     return rows
 
 
@@ -173,18 +180,19 @@ def main() -> None:
         if args.workloads:
             cmd += ["--workloads", *args.workloads]
         raise SystemExit(subprocess.call(cmd, env=env))
+    from repro import pim
+    sess = pim.session()
     tuning = None
     if args.tuned:
-        from repro.core import make_bank_grid
-        from repro.prim.registry import REGISTRY
-        from repro.runtime import autotune
-        entries = [REGISTRY[n] for n in (args.workloads or REGISTRY)]
-        tuning = autotune(make_bank_grid(),
-                          [e for e in entries if e.pipelineable],
-                          scale=args.scale)
+        registry = pim.registry()
+        names = [n for n in (args.workloads or registry)
+                 if registry[n].pipelineable]
+        tuning = sess.autotune(names, scale=args.scale, probe=False)
     from benchmarks.run import emit
     emit(throughput(workloads=args.workloads, n_requests=args.requests,
-                    n_chunks=args.chunks, scale=args.scale, tuning=tuning))
+                    n_chunks=args.chunks, scale=args.scale, tuning=tuning,
+                    grid=sess.grid))
+    sess.close()
 
 
 if __name__ == "__main__":

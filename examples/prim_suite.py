@@ -1,8 +1,11 @@
 """Run the full 16-workload PrIM suite with the paper's phase breakdown.
 
-Workloads, variants, and argument generation come straight from
-``repro.prim.registry`` (HST-S/HST-L and SCAN-SSA/SCAN-RSS are variant
-entries of their modules, hence 16 rows from 14 modules).
+The bank grid comes from a `repro.pim` session (DESIGN.md §9); workloads,
+variants, and argument generation come straight from the session's registry
+view (HST-S/HST-L and SCAN-SSA/SCAN-RSS are variant entries of their
+modules, hence 16 rows from 14 modules).  The serialized ``pim()`` variants
+are run directly on ``s.grid`` — this example renders the paper's faithful
+serialized baseline, not the pipelined runtime.
 
     PYTHONPATH=src python examples/prim_suite.py
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -15,22 +18,22 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import make_bank_grid
-from repro.prim.registry import REGISTRY
+from repro import pim
 
 
 def main():
-    g = make_bank_grid()
+    s = pim.session()
     rng = np.random.default_rng(0)
     print(f"{'bench':10s} {'cpu_dpu':>9s} {'dpu':>9s} {'inter':>9s} "
-          f"{'dpu_cpu':>9s} {'total':>9s}   ({g.n_banks} banks)")
-    for entry in REGISTRY.values():
+          f"{'dpu_cpu':>9s} {'total':>9s}   ({s.n_banks} banks)")
+    for entry in pim.registry().values():
         args = entry.make_args(rng, scale=4)
         for label, fn in entry.run_variants().items():
-            _, t = fn(g, *args)
+            _, t = fn(s.grid, *args)
             print(f"{label:10s} {t.cpu_dpu*1e3:8.2f}m {t.dpu*1e3:8.2f}m "
                   f"{t.inter_dpu*1e3:8.2f}m {t.dpu_cpu*1e3:8.2f}m "
                   f"{t.total*1e3:8.2f}m")
+    s.close()
 
 
 if __name__ == "__main__":

@@ -1,8 +1,10 @@
 """Quickstart: the paper's execution model in 30 lines.
 
-Builds a bank grid (every device = one DPU+MRAM bank), runs three PrIM
-workloads through the scatter → bank-local → exchange → gather pipeline, and
-prints the paper-style phase breakdown.
+Opens a `repro.pim` session (every device = one DPU+MRAM bank — the
+`dpu_alloc` analogue, DESIGN.md §9), runs three PrIM workloads through it,
+and prints the runtime's per-request accounting.  The session picks the
+execution per workload: chunked pipeline where the registry allows it,
+faithful serialized `pim()` otherwise.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,33 +15,32 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro import prim
-from repro.core import make_bank_grid
+from repro import pim
+from repro.prim import hist, scan, va
 
 
 def main():
-    grid = make_bank_grid()
-    print(f"bank grid: {grid.n_banks} bank(s) "
-          f"(run with XLA_FLAGS=--xla_force_host_platform_device_count=8 "
-          f"for a multi-bank grid)")
-    rng = np.random.default_rng(0)
+    with pim.session() as s:
+        print(f"bank grid: {s.n_banks} bank(s) "
+              f"(run with XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+              f"for a multi-bank grid)")
+        rng = np.random.default_rng(0)
 
-    a = rng.integers(0, 100, 1 << 20).astype(np.int32)
-    b = rng.integers(0, 100, 1 << 20).astype(np.int32)
-    out, t = prim.va.pim(grid, a, b)
-    assert (out == a + b).all()
-    print(f"VA        {t.row('VA', grid.n_banks)}")
+        a = rng.integers(0, 100, 1 << 20).astype(np.int32)
+        b = rng.integers(0, 100, 1 << 20).astype(np.int32)
+        assert (s.run("VA", a, b) == va.ref(a, b)).all()
 
-    x = rng.integers(0, 10, 1 << 20).astype(np.int32)
-    out, t = prim.scan.pim_rss(grid, x)
-    assert (out == prim.scan.ref(x)).all()
-    print(f"SCAN-RSS  {t.row('SCAN-RSS', grid.n_banks)}")
+        x = rng.integers(0, 10, 1 << 20).astype(np.int32)
+        assert (s.run("SCAN", x) == scan.ref(x)).all()
 
-    px = rng.integers(0, 256, 1 << 20).astype(np.int32)
-    out, t = prim.hist.pim_short(grid, px)
-    assert (out == prim.hist.ref(px, 256)).all()
-    print(f"HST-S     {t.row('HST-S', grid.n_banks)}")
+        px = rng.integers(0, 256, 1 << 20).astype(np.int32)
+        assert (s.run("HST", px, 256) == hist.ref(px, 256)).all()
 
+    for r in s.telemetry.records:
+        print(f"{r.workload:5s} {r.n_chunks}-chunk  "
+              f"service={r.service_s*1e3:8.2f}ms  "
+              f"moved={(r.bytes_in + r.bytes_out)/1e6:6.2f}MB  "
+              f"{r.achieved_gbps:.2f} GB/s")
     print("\nall results match the gold references.")
 
 

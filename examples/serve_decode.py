@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.launch import serve as serve_mod
 from repro.models import transformer
-from repro.runtime import carve_mesh
+from repro.runtime.elastic import carve_mesh
 
 
 def main():

@@ -1,69 +1,89 @@
-"""Sustained multi-request PrIM serving on the pipelined runtime.
+"""Sustained multi-request PrIM serving on the `repro.pim` session façade.
 
-A worker thread owns the BankGrid; producers submit a mixed stream of
+One ``pim.session(autotune=True)`` handle owns the banks: at open it
+calibrates the backend and installs per-workload tuned plans (DESIGN.md §8 —
+no hand-picked chunk counts anywhere in this file), entering the ``with``
+block starts the worker thread, and producers ``submit()`` a mixed stream of
 requests drawn from the FULL workload registry with priorities while earlier
-requests are still in flight.  The scheduler batches same-workload requests,
+requests are still in flight.  The runtime batches same-workload requests,
 pipelines their chunks (scatter k+1 overlapping compute k), and falls back
 to the serialized ``pim()`` for the registry's serialized-only workloads
 (NW, BFS — see their registry reasons).  Every result is checked against the
 workload's gold ``ref()`` with the registry's comparator.
 
-    PYTHONPATH=src python examples/serve_prim.py
-    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-        PYTHONPATH=src python examples/serve_prim.py
+    PYTHONPATH=src python examples/serve_prim.py [--banks 8] [--no-autotune]
 """
+import argparse
 import os
+import subprocess
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import make_bank_grid
-from repro.prim.registry import REGISTRY, SERIALIZED_ONLY
-from repro.runtime import PimScheduler
 
+def main(autotune: bool = True):
+    from repro import pim
 
-def main():
-    grid = make_bank_grid()
     rng = np.random.default_rng(0)
-    entries = list(REGISTRY.values())
-    print(f"serving the full {len(entries)}-workload registry on "
-          f"{grid.n_banks} bank(s) "
-          f"({sum(e.pipelineable for e in entries)} pipelined, "
-          f"{sum(not e.pipelineable for e in entries)} serialized-only)")
-
-    with PimScheduler(grid, n_chunks=4) as sched:
+    entries = list(pim.registry().values())
+    tune = {"reps": 2} if autotune else False
+    with pim.session(autotune=tune) as s:
+        print(f"serving the full {len(entries)}-workload registry on "
+              f"{s.n_banks} bank(s) "
+              f"({sum(e.pipelineable for e in entries)} pipelined, "
+              f"{sum(not e.pipelineable for e in entries)} serialized-only); "
+              f"{len(s.plans)} tuned plans installed")
         inflight = []
         for i, entry in enumerate(entries):      # sustained mixed stream:
             for _ in range(2):                   # bursts of 2 same-workload
                 args = entry.make_args(rng, scale=1)
                 gold = entry.ref(*args)
-                req = sched.submit(entry.name, *args, priority=i % 3)
+                req = s.submit(entry.name, *args, priority=i % 3)
                 inflight.append((req, gold, entry))
         for req, gold, entry in inflight:
             entry.compare(req.result(timeout=600), gold)
 
-    agg = sched.telemetry.aggregate()
+    agg = s.stats()
     print(f"{agg['requests']} requests in {agg['wall_s']:.3f}s "
           f"-> {agg['requests_per_s']:.1f} req/s, "
-          f"{agg['aggregate_gbps']:.3f} GB/s moved")
+          f"{agg['aggregate_gbps']:.3f} GB/s moved "
+          f"({agg['tuned_requests']} served under a tuned plan)")
     print(f"mean queue wait {agg['mean_queue_wait_s'] * 1e3:.1f} ms, "
           f"mean latency {agg['mean_latency_s'] * 1e3:.1f} ms")
     by_batch: dict = {}
-    for r in sched.telemetry.records:
+    for r in s.telemetry.records:
         by_batch.setdefault(r.batch_id, []).append(r)
     print(f"{len(by_batch)} batches "
           f"(size-aware same-workload coalescing):")
+    serialized_only = {e.name for e in entries if not e.pipelineable}
     for bid in sorted(by_batch):
         rs = by_batch[bid]
-        mode = ("serialized" if rs[0].workload in SERIALIZED_ONLY
-                else f"{rs[0].n_chunks}-chunk pipeline")
-        print(f"  batch {bid}: {rs[0].workload:5s} x{len(rs)} "
+        name = rs[0].workload
+        if name in serialized_only:
+            mode = "serialized"
+        else:
+            mode = (f"{rs[0].n_chunks}-chunk pipeline"
+                    + (" [tuned]" if rs[0].tuned else ""))
+        print(f"  batch {bid}: {name:5s} x{len(rs)} "
               f"prio={[r.priority for r in rs]} "
               f"service={sum(r.service_s for r in rs):.3f}s [{mode}]")
     print("all results match ref(); serving OK")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--banks", type=int, default=0,
+                    help="re-exec with N forced host devices")
+    ap.add_argument("--no-autotune", action="store_true",
+                    help="skip calibration; serve with the untuned defaults")
+    args = ap.parse_args()
+    if args.banks:
+        env = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_"
+                                         f"count={args.banks}")
+        cmd = [sys.executable, os.path.abspath(__file__)]
+        if args.no_autotune:
+            cmd.append("--no-autotune")
+        raise SystemExit(subprocess.call(cmd, env=env))
+    main(autotune=not args.no_autotune)

@@ -19,7 +19,8 @@ from repro.checkpoint import Checkpointer
 from repro.configs import get_config
 from repro.data import DataConfig, Loader
 from repro.launch import train as train_mod
-from repro.runtime import StepMonitor, carve_mesh
+from repro.runtime.elastic import carve_mesh
+from repro.runtime.straggler import StepMonitor
 
 
 def main():

@@ -2,4 +2,15 @@
 
 Reproduction + TPU-native production extension of the UPMEM/PrIM paper
 (Gómez-Luna et al., 2021). See DESIGN.md / EXPERIMENTS.md at the repo root.
+
+`repro.pim` is the stable serving surface (the UPMEM-host-API-shaped
+session façade, DESIGN.md §9); it is re-exported here lazily so that
+``import repro`` stays dependency-free.
 """
+
+
+def __getattr__(name):
+    if name == "pim":
+        import importlib
+        return importlib.import_module(".pim", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,11 @@
+"""repro.pim — the UPMEM-host-API-shaped session façade (DESIGN.md §9).
+
+The one stable surface for serving PrIM workloads: allocate banks with
+:func:`session`, launch with ``run``/``submit``/``map``, inspect
+``telemetry``/``plans``, release with ``close()`` — without hand-assembling
+``make_bank_grid`` + registry lookups + ``PimScheduler`` + ``TunedPlan``
+plumbing.  ``repro.runtime`` stays the documented internal layer underneath.
+"""
+from .session import PimSession, registry, session
+
+__all__ = ["PimSession", "registry", "session"]

@@ -1,0 +1,301 @@
+"""`PimSession` — the UPMEM-host-API-shaped surface of the runtime
+(DESIGN.md §9).
+
+The paper's programmability story is the UPMEM host library: one handle
+hides banks, transfers, and launch mechanics (`dpu_alloc` → `dpu_copy_to` →
+`dpu_launch` → `dpu_copy_from` → `dpu_free`, §2.3).  This module is that
+layer for the reproduction: one object that owns the :class:`BankGrid`, the
+workload registry view, the tuned plans, and a telemetry sink, so callers
+never hand-assemble ``make_bank_grid()`` + ``REGISTRY[name]`` +
+``PimScheduler`` + ``TunedPlan`` plumbing themselves.
+
+    from repro import pim
+
+    with pim.session(banks=8, autotune=True) as s:   # dpu_alloc
+        req = s.submit("GEMV", A, x, priority=1)     # async launch -> future
+        y1 = s.run("VA", a, b)                       # sync launch
+        ys = s.map("RED", [(x1,), (x2,), (x3,)])     # streamed batch
+        y2 = req.result()
+    # session closed: banks released, submit() now raises   # dpu_free
+
+The UPMEM verb mapping is tabulated in DESIGN.md §9.  Two execution modes,
+mirroring the scheduler underneath:
+
+* **deterministic** (default): ``run()`` / ``map()`` / ``drain()`` execute
+  queued work in the calling thread — what benchmarks and tests use;
+* **serving** (``with pim.session(...)`` or ``start()``): a worker thread
+  owns all JAX dispatch and serves ``submit()`` futures as they arrive —
+  what ``examples/serve_prim.py`` uses.
+
+``run()`` auto-picks execution per registry entry: pipelineable workloads go
+through the chunk pipeline (tuned plan if one is installed), serialized-only
+workloads (NW, BFS) fall back to the faithful ``pim()``.
+``PimScheduler`` / ``run_pipelined*`` remain the documented internal layer
+(DESIGN.md §5) — reachable via :attr:`PimSession.scheduler` when the façade
+is too coarse.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Any, Iterable, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.banked import BankGrid, make_bank_grid
+from repro.runtime.autotune import DEFAULT_N_CHUNKS, TuningResult
+from repro.runtime.pipeline import run_pipelined_many
+from repro.runtime.scheduler import PimRequest, PimScheduler
+from repro.runtime.telemetry import Telemetry
+
+if TYPE_CHECKING:  # annotation-only: importing repro.prim pulls the suite
+    from repro.prim.registry import WorkloadEntry
+
+    from repro.runtime.autotune import TunedPlan
+
+
+def session(banks: int | None = None, *, autotune: bool | Mapping = False,
+            **kwargs) -> "PimSession":
+    """``dpu_alloc`` analogue: allocate a grid of ``banks`` banks (default:
+    every available device) and return the session handle that owns it.
+
+    ``autotune=True`` calibrates the backend and installs per-workload
+    tuned plans before the first request (DESIGN.md §8); pass a dict
+    (e.g. ``autotune={"reps": 2, "probe": False}``) to forward options to
+    :meth:`PimSession.autotune`.  Remaining ``kwargs`` go to
+    :class:`PimSession`.
+    """
+    return PimSession(banks=banks, autotune=autotune, **kwargs)
+
+
+def registry() -> Mapping[str, "WorkloadEntry"]:
+    """The session-level workload registry view: name -> WorkloadEntry
+    (lazy — importing the registry pulls the whole PrIM suite)."""
+    from repro.prim.registry import REGISTRY
+    return REGISTRY
+
+
+class PimSession:
+    """One handle over grid + registry + plans + telemetry (DESIGN.md §9).
+
+    Constructed via :func:`session` (allocates its own grid) or directly
+    with ``grid=`` to wrap an existing :class:`BankGrid` (benchmarks reuse
+    one grid — and its compiled phase cache — across many sessions).
+    """
+
+    def __init__(self, grid: BankGrid | None = None, *,
+                 banks: int | None = None,
+                 autotune: bool | Mapping = False,
+                 plans: Mapping[str, "TunedPlan"] | TuningResult | None = None,
+                 n_chunks: int = DEFAULT_N_CHUNKS,
+                 max_batch_requests: int = 8,
+                 max_batch_bytes: int = 256 << 20,
+                 telemetry: Telemetry | None = None):
+        if grid is not None and banks is not None:
+            raise ValueError("pass either grid= or banks=, not both")
+        self._grid = grid if grid is not None else make_bank_grid(banks)
+        self._tuning: TuningResult | None = None
+        if isinstance(plans, TuningResult):
+            self._tuning, plans = plans, plans.plans
+        self._sched = PimScheduler(
+            self._grid, n_chunks=n_chunks,
+            max_batch_requests=max_batch_requests,
+            max_batch_bytes=max_batch_bytes, plans=plans,
+            telemetry=telemetry)
+        self._closed = False
+        self._serving = False
+        # an empty options mapping still means "autotune with defaults"
+        if autotune or isinstance(autotune, Mapping):
+            self.autotune(**(dict(autotune) if isinstance(autotune, Mapping)
+                             else {}))
+
+    # -- handle state ---------------------------------------------------------
+
+    @property
+    def grid(self) -> BankGrid:
+        """The owned :class:`BankGrid` (the ``dpu_set`` analogue)."""
+        return self._grid
+
+    @property
+    def n_banks(self) -> int:
+        return self._grid.n_banks
+
+    @property
+    def scheduler(self) -> PimScheduler:
+        """Escape hatch to the documented internal layer (DESIGN.md §5)."""
+        return self._sched
+
+    @property
+    def telemetry(self) -> Telemetry:
+        """Completed-request records + aggregates for this session."""
+        return self._sched.telemetry
+
+    @property
+    def plans(self) -> dict[str, "TunedPlan"]:
+        """Installed per-workload tuned plans (empty = untuned constants)."""
+        return self._sched.plans
+
+    @property
+    def tuning(self) -> TuningResult | None:
+        """Full calibration result of the last :meth:`autotune` (or the
+        TuningResult passed as ``plans=``); None when untuned."""
+        return self._tuning
+
+    @property
+    def workloads(self) -> tuple[str, ...]:
+        """Every servable workload name (registry order): pipelineable
+        entries first-class, serialized-only entries via the fallback."""
+        return tuple(self._sched.workloads) + tuple(self._sched.serialized)
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def stats(self) -> dict:
+        """Aggregate telemetry (requests/sec, mean latency, GB/s moved)."""
+        return self.telemetry.aggregate()
+
+    def pending(self) -> int:
+        return self._sched.pending()
+
+    def _check_open(self, verb: str) -> None:
+        if self._closed:
+            raise RuntimeError(f"{verb}() on a closed PimSession — the "
+                               f"banks were released at close()")
+
+    # -- tuning ---------------------------------------------------------------
+
+    def autotune(self, entries: Sequence | None = None, *, scale: int = 1,
+                 reps: int = 3, probe: bool = True, **kwargs) -> TuningResult:
+        """Calibrate the backend, fit per-workload stage models, and install
+        the solved plans (chunk count + batch size) on this session —
+        :meth:`PimScheduler.autotuned` behind the façade (DESIGN.md §8).
+
+        ``entries`` restricts tuning to a subset (registry names or
+        WorkloadEntry objects); the result also lands in :attr:`tuning` for
+        artifact embedding.  Re-tuning updates plans in place.
+        """
+        from repro.runtime.autotune import autotune as _autotune
+        self._check_open("autotune")
+        if entries is not None:
+            reg = registry()
+            entries = [reg[e] if isinstance(e, str) else e for e in entries]
+        result = _autotune(self._grid, entries, scale=scale, reps=reps,
+                           probe=probe, **kwargs)
+        self._sched.plans.update(result.plans)
+        self._tuning = result
+        return result
+
+    # -- launch verbs ---------------------------------------------------------
+
+    def submit(self, workload: str, *args, priority: int = 0) -> PimRequest:
+        """Asynchronous launch: enqueue one invocation, return its future.
+        In serving mode the worker thread picks it up; in deterministic mode
+        it waits for the next :meth:`drain` / :meth:`run`."""
+        self._check_open("submit")
+        return self._sched.submit(workload, *args, priority=priority)
+
+    def run(self, workload: str, *args, priority: int = 0,
+            timeout: float | None = None) -> Any:
+        """Synchronous launch (``dpu_launch`` + ``dpu_sync``): run one
+        invocation to completion and return its result.  Pipelined vs
+        serialized-only execution is picked per registry entry; a tuned plan
+        overrides the chunk count when installed."""
+        self._check_open("run")
+        req = self._sched.submit(workload, *args, priority=priority)
+        if self._serving:
+            return req.result(timeout=timeout)
+        self._sched.drain()
+        return req.result(timeout=0)
+
+    def map(self, workload: str, arg_stream: Iterable[tuple]) -> list:
+        """Streamed batch: run many same-workload invocations back-to-back.
+
+        In deterministic mode pipelineable workloads stream *all* their
+        chunks through one pipeline (``run_pipelined_many`` — the banks
+        never drain between requests, ignoring the scheduler's batch caps);
+        serialized-only workloads fall back per item.  In serving mode the
+        requests are submitted to the worker thread, whose size-aware
+        batching coalesces them.  Results come back in stream order.
+        """
+        self._check_open("map")
+        args_list = [tuple(a) for a in arg_stream]
+        if not args_list:
+            return []
+        if self._serving or workload not in self._sched.workloads:
+            # serving (worker thread owns dispatch) or serialized-only /
+            # unknown: the scheduler path handles all three
+            reqs = [self.submit(workload, *a) for a in args_list]
+            if not self._serving:
+                self._sched.drain()
+            return [r.result() for r in reqs]
+        records = [self._sched.make_record(workload, a) for a in args_list]
+        results = run_pipelined_many(
+            self._grid, self._sched.workloads[workload], args_list,
+            n_chunks=self._sched.n_chunks,
+            plan=self._sched.plans.get(workload), records=records)
+        for rec, res in zip(records, results):
+            rec.bytes_out = res.nbytes if isinstance(res, np.ndarray) else 0
+            self.telemetry.record(rec)
+        return results
+
+    def drain(self) -> int:
+        """Deterministic mode: process every queued request in the calling
+        thread; returns the number completed."""
+        self._check_open("drain")
+        if self._serving:
+            raise RuntimeError("drain() while serving — results arrive via "
+                               "their futures; stop()/close() to drain out")
+        return self._sched.drain()
+
+    # -- explicit transfers (power users; run()/map() do this for you) --------
+
+    def transfer_in(self, x, spec=None, *, broadcast: bool = False):
+        """``dpu_copy_to`` / ``dpu_push_xfer`` escape hatch: place ``x`` on
+        the banks — sharded over the bank axis (default; ``spec`` overrides
+        the layout) or replicated everywhere (``broadcast=True``,
+        ``dpu_broadcast_to``)."""
+        self._check_open("transfer_in")
+        if broadcast:
+            return self._grid.broadcast(x)
+        return self._grid.to_banks(x, spec)
+
+    def transfer_out(self, x) -> np.ndarray:
+        """``dpu_copy_from`` escape hatch: gather a banked array to host."""
+        self._check_open("transfer_out")
+        return self._grid.from_banks(x)
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def start(self) -> "PimSession":
+        """Enter serving mode: a worker thread owns all JAX dispatch and
+        serves submitted requests as they arrive."""
+        self._check_open("start")
+        if not self._serving:
+            self._sched.start()
+            self._serving = True
+        return self
+
+    def close(self) -> None:
+        """``dpu_free`` analogue: finish everything queued, stop the worker
+        thread, and refuse further launches.  Idempotent — a second close()
+        is a no-op."""
+        if self._closed:
+            return
+        if self._serving:
+            self._sched.stop()
+            self._serving = False
+        elif self._sched.pending():
+            self._sched.drain()      # no future may be left dangling
+        self._closed = True
+
+    def __enter__(self) -> "PimSession":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __repr__(self) -> str:
+        state = ("closed" if self._closed
+                 else "serving" if self._serving else "open")
+        return (f"PimSession({self.n_banks} banks, {state}, "
+                f"{len(self.plans)} tuned plans, "
+                f"{len(self.telemetry)} records)")

@@ -1,13 +1,45 @@
+"""repro.runtime — the pipelined PIM-serving runtime (internal layer).
+
+The public names here are the PIM-serving set the `repro.pim` session
+façade (DESIGN.md §9) is built on: the chunk pipeline, the scheduler, the
+telemetry sink, and the autotuner.  Prefer ``repro.pim`` as the entry
+point; reach for these directly when the façade is too coarse
+(DESIGN.md §5 and §8 document the layer).
+
+The train-side fault-tolerance utilities live in their own submodules —
+``repro.runtime.elastic`` (mesh re-carve / reshard) and
+``repro.runtime.straggler`` (step monitor / watchdog); import them from
+there.  The old flat re-exports (``repro.runtime.carve_mesh`` etc.) keep
+working behind a DeprecationWarning shim.
+"""
+import importlib
+import warnings
+
 from .autotune import (StageFit, TunedPlan, TuningResult, WorkloadProfile,
                        autotune, calibrate, plan_for, probe_plan)
-from .elastic import carve_mesh, reshard, shardings_for, simulate_failure
 from .pipeline import PipelineResult, run_pipelined, run_pipelined_many
 from .scheduler import PimRequest, PimScheduler
-from .straggler import StepMonitor, StragglerConfig, Watchdog
 from .telemetry import RequestRecord, Telemetry
-__all__ = ["carve_mesh", "reshard", "shardings_for", "simulate_failure",
-           "StepMonitor", "StragglerConfig", "Watchdog",
-           "PipelineResult", "run_pipelined", "run_pipelined_many",
+
+__all__ = ["PipelineResult", "run_pipelined", "run_pipelined_many",
            "PimRequest", "PimScheduler", "RequestRecord", "Telemetry",
            "StageFit", "TunedPlan", "TuningResult", "WorkloadProfile",
            "autotune", "calibrate", "plan_for", "probe_plan"]
+
+#: train-side names that moved behind their submodules (PR 4): old flat
+#: imports still resolve, with a DeprecationWarning pointing at the new home.
+_MOVED = {name: "elastic" for name in
+          ("carve_mesh", "reshard", "shardings_for", "simulate_failure")}
+_MOVED.update({name: "straggler" for name in
+               ("StepMonitor", "StragglerConfig", "Watchdog")})
+
+
+def __getattr__(name):
+    if name in _MOVED:
+        mod = _MOVED[name]
+        warnings.warn(
+            f"repro.runtime.{name} moved to repro.runtime.{mod}; "
+            f"import it from there (the flat re-export will be removed)",
+            DeprecationWarning, stacklevel=2)
+        return getattr(importlib.import_module(f".{mod}", __name__), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

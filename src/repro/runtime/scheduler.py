@@ -39,6 +39,7 @@ import itertools
 import threading
 from typing import TYPE_CHECKING, Any, Mapping, Sequence
 
+import jax
 import numpy as np
 
 from repro.core.banked import BankGrid
@@ -54,9 +55,14 @@ if TYPE_CHECKING:  # annotation-only: importing repro.prim pulls the suite
 
 
 def _nitems(args) -> int:
-    for a in args:
-        if isinstance(a, np.ndarray):
-            return a.shape[0]
+    """Leading dim of the first array leaf — the ``n_items`` a request's
+    telemetry record reports (batching itself is byte-capped via
+    ``tree_nbytes``).  Pytree-aware, mirroring ``tree_nbytes``: MLP passes
+    a *list* of layer matrices first, so a flat top-level scan would skip
+    it and report the bias vector's length instead."""
+    for leaf in jax.tree_util.tree_leaves(args):
+        if hasattr(leaf, "shape") and getattr(leaf, "ndim", 0) >= 1:
+            return leaf.shape[0]
     return 0
 
 
@@ -136,18 +142,24 @@ class PimScheduler:
 
     # -- submission -----------------------------------------------------------
 
+    def make_record(self, workload: str, args: tuple,
+                    priority: int = 0) -> RequestRecord:
+        """Stamp a new request's lifecycle record (id, sizing, submit time).
+        The single construction site for every path that feeds telemetry —
+        ``submit()`` here and the session façade's streamed ``map()``."""
+        return RequestRecord(request_id=next(self._seq), workload=workload,
+                             n_items=_nitems(args), bytes_in=_nbytes(args),
+                             priority=priority, t_submit=now())
+
     def submit(self, workload: str, *args, priority: int = 0) -> PimRequest:
         """Enqueue one workload invocation; returns a waitable handle."""
         if workload not in self.workloads and workload not in self.serialized:
             raise KeyError(f"unknown workload {workload!r}; have "
                            f"{sorted(self.workloads) + sorted(self.serialized)}")
-        seq = next(self._seq)
-        rec = RequestRecord(request_id=seq, workload=workload,
-                            n_items=_nitems(args), bytes_in=_nbytes(args),
-                            priority=priority, t_submit=now())
+        rec = self.make_record(workload, args, priority)
         req = PimRequest(workload, args, priority, rec)
         with self._cv:
-            heapq.heappush(self._queue, (-priority, seq, req))
+            heapq.heappush(self._queue, (-rec.priority, rec.request_id, req))
             self._cv.notify()
         return req
 

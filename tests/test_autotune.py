@@ -124,14 +124,13 @@ def test_tuning_result_json_round_trip(bank_grid):
 
 
 def test_scheduler_serves_under_tuned_plan(bank_grid, rng):
-    from repro.prim.registry import REGISTRY
-    from repro.runtime import PimScheduler
-    e = REGISTRY["VA"]
+    from repro import pim
+    e = pim.registry()["VA"]
     args = e.make_args(rng, 1)
     plan = TunedPlan(workload="VA", n_chunks=2, max_batch_requests=3,
                      predicted_serialized_s=1.0, predicted_pipelined_s=0.5,
                      predicted_overlap=2.0)
-    sched = PimScheduler(bank_grid, plans={"VA": plan})
+    sched = pim.PimSession(grid=bank_grid, plans={"VA": plan}).scheduler
     reqs = [sched.submit("VA", *args) for _ in range(4)]
     sched.drain()
     for r in reqs:
@@ -161,14 +160,13 @@ def test_run_pipelined_stamps_plan_on_record(bank_grid, rng):
 
 
 def test_misprediction_metric(bank_grid, rng):
-    from repro.prim.registry import REGISTRY
-    from repro.runtime import PimScheduler
-    e = REGISTRY["VA"]
+    from repro import pim
+    e = pim.registry()["VA"]
     args = e.make_args(rng, 1)
     plan = TunedPlan(workload="VA", n_chunks=1, max_batch_requests=8,
                      predicted_serialized_s=1.0, predicted_pipelined_s=0.5,
                      predicted_overlap=2.0)
-    sched = PimScheduler(bank_grid, plans={"VA": plan})
+    sched = pim.PimSession(grid=bank_grid, plans={"VA": plan}).scheduler
     req = sched.submit("VA", *args)
     sched.drain()
     rec = req.record

@@ -1,6 +1,6 @@
 """Bench artifact layer: tools/bench.py produces a schema-valid document
 that survives a JSON round trip, tools/check_bench.py validates schemas and
-catches regressions, and the committed BENCH_PR3.json baseline is valid."""
+catches regressions, and the committed BENCH_PR4.json baseline is valid."""
 import json
 import os
 import pathlib
@@ -52,9 +52,13 @@ def test_compare_identical_passes(doc):
 
 def test_compare_detects_speedup_regression(doc):
     cur = json.loads(json.dumps(doc))
+    # scale fixed and tuned together: the tuned>=fixed invariant must keep
+    # holding (it is validated first) so the *ratio* gate is what fires
+    cur["workloads"]["VA"]["fixed"]["overlap_speedup"] *= 0.5
     cur["workloads"]["VA"]["tuned"]["overlap_speedup"] *= 0.5
     errs = check_bench.compare(doc, cur)
     assert errs and any("tuned.overlap_speedup" in e for e in errs)
+    assert any("fixed.overlap_speedup" in e for e in errs)
 
 
 def test_compare_ratio_gate_is_env_scoped(doc):
@@ -63,6 +67,7 @@ def test_compare_ratio_gate_is_env_scoped(doc):
     the numeric gate."""
     cur = json.loads(json.dumps(doc))
     cur["env"]["platform"] = "other-machine"
+    cur["workloads"]["VA"]["fixed"]["overlap_speedup"] *= 0.5
     cur["workloads"]["VA"]["tuned"]["overlap_speedup"] *= 0.5
     notes = []
     assert check_bench.compare(doc, cur, notes=notes) == []
@@ -132,8 +137,8 @@ def test_check_bench_cli(doc, tmp_path):
 # -- the committed baseline CI gates against ----------------------------------
 
 def test_committed_baseline_is_valid():
-    path = ROOT / "BENCH_PR3.json"
-    assert path.exists(), "BENCH_PR3.json baseline missing from repo root"
+    path = ROOT / "BENCH_PR4.json"
+    assert path.exists(), "BENCH_PR4.json baseline missing from repo root"
     base = json.loads(path.read_text())
     assert check_bench.validate(base) == []
     # generated at the CI bench-smoke shape: 8 simulated banks, full registry

@@ -8,6 +8,7 @@ jax locks the device count at init) at 8 simulated banks.
 import os
 import subprocess
 import sys
+import zlib
 
 import numpy as np
 import pytest
@@ -22,7 +23,9 @@ CHUNKED_NAMES = list(PIPELINEABLE)
 @pytest.mark.parametrize("n_chunks", [1, 3])
 def test_chunked_matches_pim_and_ref(bank_grid, name, n_chunks):
     e = REGISTRY[name]
-    rng = np.random.default_rng(hash(name) % (1 << 31))
+    # stable per-workload seed: hash() is salted per process, which
+    # made the drawn args (and float tolerances) a per-run lottery
+    rng = np.random.default_rng(zlib.crc32(name.encode()))
     args = e.make_args(rng, scale=1)
     gold = e.ref(*args)
     serial, times = e.pim(bank_grid, *args)
@@ -38,6 +41,7 @@ def test_chunked_matches_pim_and_ref(bank_grid, name, n_chunks):
 
 SCRIPT = r"""
 import sys; sys.path.insert(0, {src!r})
+import zlib
 import numpy as np
 from repro.core import make_bank_grid
 from repro.prim.registry import PIPELINEABLE, REGISTRY
@@ -46,7 +50,7 @@ g = make_bank_grid()
 assert g.n_banks == 8, g.n_banks
 for name in PIPELINEABLE:
     e = REGISTRY[name]
-    rng = np.random.default_rng(hash(name) % (1 << 31))
+    rng = np.random.default_rng(zlib.crc32(name.encode()))
     args = e.make_args(rng, scale=1)
     gold = e.ref(*args)
     serial, _ = e.pim(g, *args)

@@ -81,7 +81,7 @@ for k in ("router", "wi", "wo"):
                                rtol=5e-3, atol=5e-3)
 
 # elastic: carve a degraded mesh (8 -> 6 devices) and reshard a tree onto it
-from repro.runtime import carve_mesh, reshard, simulate_failure
+from repro.runtime.elastic import carve_mesh, reshard, simulate_failure
 from jax.sharding import PartitionSpec as P
 m8 = carve_mesh(jax.devices(), model_parallel=2)
 m6 = simulate_failure(m8, n_lost=2, model_parallel=2)

@@ -3,10 +3,9 @@ and the scheduler's serialized fallback for non-pipelineable workloads."""
 import numpy as np
 import pytest
 
-from repro import prim
+from repro import pim, prim
 from repro.prim.registry import (PIPELINEABLE, REGISTRY, SERIALIZED_ONLY,
                                  markdown_table)
-from repro.runtime import PimScheduler
 
 
 def test_registry_covers_the_suite():
@@ -51,7 +50,7 @@ def test_markdown_table_lists_everything():
 
 def test_scheduler_serves_serialized_only(bank_grid, rng):
     """NW/BFS are not silently skipped: submit() falls back to pim()."""
-    sched = PimScheduler(bank_grid, n_chunks=2)
+    sched = pim.PimSession(grid=bank_grid, n_chunks=2).scheduler
     s1 = rng.integers(0, 4, 48).astype(np.int32)
     s2 = rng.integers(0, 4, 40).astype(np.int32)
     adj = prim.bfs.random_graph(101, 3, seed=7)
@@ -66,4 +65,8 @@ def test_scheduler_serves_serialized_only(bank_grid, rng):
 
 def test_scheduler_rejects_unknown(bank_grid):
     with pytest.raises(KeyError):
-        PimScheduler(bank_grid).submit("FFT", np.zeros(4))
+        pim.PimSession(grid=bank_grid).submit("FFT", np.zeros(4))
+
+
+def test_session_registry_view_is_the_registry():
+    assert pim.registry() is REGISTRY

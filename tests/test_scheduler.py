@@ -1,11 +1,24 @@
-"""Pipelined runtime: result equivalence vs the gold refs under concurrent
-submission, scheduling policy (priority / FIFO / batching), and telemetry."""
+"""Pipelined runtime *internal layer* (DESIGN.md §5): result equivalence
+vs the gold refs under concurrent submission, scheduling policy (priority /
+FIFO / batching), and telemetry.
+
+Sessions are constructed through the `repro.pim` façade (DESIGN.md §9) and
+unit-level policy tests reach the scheduler underneath via
+``PimSession.scheduler`` — the façade itself is covered in
+``tests/test_session.py``."""
+import warnings
+
 import numpy as np
 import pytest
 
-from repro import prim
+from repro import pim, prim
 from repro.prim.common import CHUNKED
-from repro.runtime import PimScheduler, Telemetry, run_pipelined
+from repro.runtime import Telemetry, run_pipelined
+
+
+def _sched(bank_grid, **kwargs):
+    """A scheduler obtained the façade way (deterministic session)."""
+    return pim.PimSession(grid=bank_grid, **kwargs).scheduler
 
 
 def _cases(rng):
@@ -52,7 +65,7 @@ def test_pipelined_vs_serialized_pim(bank_grid, rng):
 # -- scheduler: correctness under concurrent submission -----------------------
 
 def test_concurrent_mixed_submission(bank_grid, rng):
-    sched = PimScheduler(bank_grid, n_chunks=3)
+    sched = _sched(bank_grid, n_chunks=3)
     submitted = []
     for rep in range(3):                 # interleave all 4 workloads
         for name, args, gold in _cases(rng):
@@ -66,18 +79,18 @@ def test_concurrent_mixed_submission(bank_grid, rng):
 
 def test_threaded_serving(bank_grid, rng):
     cases = _cases(rng)
-    with PimScheduler(bank_grid, n_chunks=2) as sched:
-        submitted = [(sched.submit(name, *args), gold)
+    with pim.PimSession(grid=bank_grid, n_chunks=2) as sess:
+        submitted = [(sess.submit(name, *args), gold)
                      for name, args, gold in cases for _ in range(2)]
         for req, gold in submitted:
             _check(req.result(timeout=300), gold)
-    assert len(sched.telemetry) == len(submitted)
+    assert len(sess.telemetry) == len(submitted)
 
 
 # -- scheduler: policy --------------------------------------------------------
 
 def test_priority_then_fifo(bank_grid, rng):
-    sched = PimScheduler(bank_grid, n_chunks=2, max_batch_requests=1)
+    sched = _sched(bank_grid, n_chunks=2, max_batch_requests=1)
     a = rng.integers(0, 9, 64).astype(np.int32)
     low = sched.submit("VA", a, a, priority=0)
     mid = sched.submit("RED", a, priority=1)
@@ -92,7 +105,7 @@ def test_priority_then_fifo(bank_grid, rng):
 
 
 def test_same_workload_batching(bank_grid, rng):
-    sched = PimScheduler(bank_grid, n_chunks=2, max_batch_requests=4)
+    sched = _sched(bank_grid, n_chunks=2, max_batch_requests=4)
     a = rng.integers(0, 9, 256).astype(np.int32)
     for _ in range(5):
         sched.submit("VA", a, a)
@@ -106,8 +119,8 @@ def test_same_workload_batching(bank_grid, rng):
 
 def test_size_aware_batching(bank_grid, rng):
     a = rng.integers(0, 9, 1024).astype(np.int32)
-    sched = PimScheduler(bank_grid, n_chunks=2, max_batch_requests=8,
-                         max_batch_bytes=3 * a.nbytes * 2)  # fits 3 VA pairs
+    sched = _sched(bank_grid, n_chunks=2, max_batch_requests=8,
+                   max_batch_bytes=3 * a.nbytes * 2)  # fits 3 VA pairs
     for _ in range(4):
         sched.submit("VA", a, a)
     sched.drain()
@@ -121,7 +134,7 @@ def test_batching_never_jumps_higher_priority(bank_grid, rng):
     """Coalescing stops at the first non-matching entry: a same-workload
     request queued *behind* a higher-priority request must not be pulled
     ahead of it."""
-    sched = PimScheduler(bank_grid, n_chunks=2)
+    sched = _sched(bank_grid, n_chunks=2)
     a = rng.integers(0, 9, 64).astype(np.int32)
     va_hi = sched.submit("VA", a, a, priority=2)
     red_mid = sched.submit("RED", a, priority=1)
@@ -137,7 +150,7 @@ def test_batching_never_jumps_higher_priority(bank_grid, rng):
 def test_bad_request_does_not_poison_batch(bank_grid, rng):
     """A malformed request coalesced into a batch fails alone; the healthy
     requests in the same batch still complete."""
-    sched = PimScheduler(bank_grid, n_chunks=2)
+    sched = _sched(bank_grid, n_chunks=2)
     A = rng.normal(size=(16, 8)).astype(np.float32)
     x = rng.normal(size=8).astype(np.float32)
     good1 = sched.submit("GEMV", A, x)
@@ -151,7 +164,7 @@ def test_bad_request_does_not_poison_batch(bank_grid, rng):
 
 
 def test_unknown_workload_rejected(bank_grid):
-    sched = PimScheduler(bank_grid)
+    sched = _sched(bank_grid)
     with pytest.raises(KeyError):
         sched.submit("NOPE", np.arange(4))
 
@@ -160,7 +173,7 @@ def test_unknown_workload_rejected(bank_grid):
 
 def test_telemetry_records(bank_grid, rng):
     sink = Telemetry()
-    sched = PimScheduler(bank_grid, n_chunks=3, telemetry=sink)
+    sched = _sched(bank_grid, n_chunks=3, telemetry=sink)
     a = rng.integers(0, 9, 4096).astype(np.int32)
     req = sched.submit("VA", a, a, priority=7)
     sched.drain()
@@ -191,9 +204,53 @@ def test_telemetry_empty_aggregate():
 
 
 def test_request_error_propagates(bank_grid):
-    sched = PimScheduler(bank_grid)
+    sched = _sched(bank_grid)
     bad = sched.submit("GEMV", np.ones((4, 4), np.float32),
                        np.ones(5, np.float32))   # shape mismatch
     sched.drain()
     with pytest.raises(Exception):
         bad.result(timeout=5)
+
+
+# -- request sizing -----------------------------------------------------------
+
+def test_nitems_is_pytree_aware(rng):
+    """MLP's args lead with a *list* of layer matrices: size-aware batching
+    must count the batch's leading dim (first array leaf), not fall through
+    to the bias vector (satellite fix, mirrors tree_nbytes)."""
+    from repro.runtime.scheduler import _nitems
+    e = pim.registry()["MLP"]
+    args = e.make_args(rng, 1)
+    assert _nitems(args) == args[0][0].shape[0]     # 256, not len(bias)=512
+    assert _nitems(args) != args[1].shape[0]
+    a = rng.integers(0, 9, 7).astype(np.int32)
+    assert _nitems((a, a)) == 7                     # flat args unchanged
+    assert _nitems((3.5,)) == 0                     # scalars have no items
+
+
+def test_scheduler_records_mlp_batch_items(bank_grid, rng):
+    e = pim.registry()["MLP"]
+    args = e.make_args(rng, 1)
+    sess = pim.PimSession(grid=bank_grid)
+    req = sess.submit("MLP", *args)
+    sess.close()
+    assert req.record.n_items == args[0][0].shape[0]
+    e.compare(req.result(timeout=0), e.ref(*args))
+
+
+# -- runtime namespace split --------------------------------------------------
+
+def test_runtime_flat_reexports_are_deprecated():
+    """Train-side utilities moved behind repro.runtime.elastic/.straggler;
+    the old flat names still resolve but warn."""
+    import repro.runtime as rt
+    from repro.runtime import elastic, straggler
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert rt.carve_mesh is elastic.carve_mesh
+        assert rt.StepMonitor is straggler.StepMonitor
+    assert len(w) == 2
+    assert all(issubclass(x.category, DeprecationWarning) for x in w)
+    assert "repro.runtime.elastic" in str(w[0].message)
+    with pytest.raises(AttributeError):
+        rt.no_such_name

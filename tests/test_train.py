@@ -13,8 +13,9 @@ from repro.checkpoint import Checkpointer
 from repro.configs import get_config
 from repro.data import DataConfig, Loader
 from repro.launch import train as train_mod
-from repro.runtime import StepMonitor, carve_mesh, reshard, simulate_failure
-from repro.runtime.elastic import shardings_for
+from repro.runtime.elastic import (carve_mesh, reshard, shardings_for,
+                                   simulate_failure)
+from repro.runtime.straggler import StepMonitor
 
 
 def _mesh():

@@ -1,23 +1,29 @@
 #!/usr/bin/env python
 """Unified benchmark harness — one CLI, one schema-versioned JSON artifact.
 
-Wraps the three benchmark drivers behind a single entry point and emits a
-machine-readable ``BENCH_*.json`` (EXPERIMENTS.md §Bench-artifacts):
+Wraps the four benchmark drivers behind a single entry point and emits a
+machine-readable ``BENCH_*.json`` (EXPERIMENTS.md §Bench-artifacts).  All
+grid/scheduler/plan assembly goes through the ``repro.pim`` session façade
+(DESIGN.md §9):
 
 * ``benchmarks/throughput.py`` — serialized ``pim()`` vs fixed-chunk vs
   autotuned pipeline for the full registry (the tuned plans come from
-  ``repro.runtime.autotune``, DESIGN.md §8; the fitted model parameters are
+  ``PimSession.autotune``, DESIGN.md §8; the fitted model parameters are
   embedded in the artifact);
 * ``benchmarks/prim_scaling.py`` — strong-scaling phase breakdown;
 * ``benchmarks/microbench.py`` — the characterization slice (model vs
-  measured backend limits).
+  measured backend limits);
+* ``benchmarks/roofline.py`` — the LM roofline table from the dry-run
+  records (embedded when ``experiments/dryrun/`` has records, and exposed
+  as the ``roofline`` subcommand: ``tools/bench.py roofline [--cell ...]``).
 
 The artifact is what CI uploads and gates on: ``tools/check_bench.py``
 validates its schema and compares it against the committed baseline.
 ``--smoke`` keeps everything CI-sized (small scale, few requests, the
 characterization slice only).
 
-    PYTHONPATH=src python tools/bench.py --smoke --banks 8 --out BENCH_PR3.json
+    PYTHONPATH=src python tools/bench.py --smoke --banks 8 --out BENCH_PR4.json
+    PYTHONPATH=src python tools/bench.py roofline            # 4th subcommand
 """
 from __future__ import annotations
 
@@ -83,44 +89,58 @@ def _workload_doc(row: dict, entry) -> dict:
 def collect(grid=None, workloads=None, *, n_requests: int = 6,
             scale: int = 2, smoke: bool = False,
             pr_tag: str | None = None) -> dict:
-    """Run the suites and assemble the artifact document."""
+    """Run the suites and assemble the artifact document.  Grid, plans, and
+    calibration all come from one `repro.pim` session; ``grid=`` wraps a
+    caller's existing grid in the session instead of allocating one."""
     from benchmarks import microbench as mb
     from benchmarks import prim_scaling as ps
+    from benchmarks import roofline as rl
     from benchmarks.throughput import throughput
-    from repro.core import make_bank_grid
-    from repro.prim.registry import REGISTRY
-    from repro.runtime import autotune
+    from repro import pim
 
-    grid = grid or make_bank_grid()
-    names = list(workloads or REGISTRY)
-    entries = [REGISTRY[n] for n in names]
+    session = pim.PimSession(grid=grid)   # grid=None -> allocate one
+    registry = pim.registry()
+    names = list(workloads or registry)
+    entries = [registry[n] for n in names]
 
-    tuning = autotune(grid, [e for e in entries if e.pipelineable],
-                      scale=scale, reps=2 if smoke else 3)
+    tuning = session.autotune([e for e in entries if e.pipelineable],
+                              scale=scale, reps=2 if smoke else 3,
+                              probe=False)
     rows = throughput(workloads=names, n_requests=n_requests, scale=scale,
-                      n_chunks=DEFAULT_N_CHUNKS, tuning=tuning, grid=grid)
+                      n_chunks=DEFAULT_N_CHUNKS, tuning=tuning,
+                      grid=session.grid)
 
     doc = {
         "schema": SCHEMA,
         "env": env_info(),
         "settings": {"pr_tag": pr_tag, "smoke": smoke,
-                     "banks": grid.n_banks, "n_requests": n_requests,
+                     "banks": session.n_banks, "n_requests": n_requests,
                      "scale": scale, "default_n_chunks": DEFAULT_N_CHUNKS},
         "model": tuning.as_dict(),
-        "workloads": {row["workload"]: _workload_doc(row, REGISTRY[
+        "workloads": {row["workload"]: _workload_doc(row, registry[
             row["workload"]]) for row in rows},
-        "micro": mb.smoke(grid) if smoke else [
+        "micro": mb.smoke(session.grid) if smoke else [
             r for fig in mb.ALL for r in
             (fig(fast=True) if fig is mb.fig4_arith_throughput else fig())],
         "scaling": ps.strong_scaling(
-            bank_counts=sorted({1, grid.n_banks}),
+            bank_counts=sorted({1, session.n_banks}),
             scale=1 if smoke else 4,
             workloads=("VA", "GEMV") if smoke else None),
+        # the fourth benchmark: rows ride along when dry-run records exist
+        # ([] otherwise — the LM roofline needs repro.launch.dryrun output)
+        "roofline": rl.rows(rl.load_records()),
     }
+    session.close()
     return doc
 
 
 def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv[:1] == ["roofline"]:
+        # the fourth subcommand: render the roofline table / re-run a cell
+        from benchmarks import roofline as rl
+        return rl.main(argv[1:]) or 0
+
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--banks", type=int, default=0,
                     help="re-exec with N forced host devices")
@@ -128,7 +148,7 @@ def main(argv=None) -> int:
                     help="CI-sized run: small scale, few requests, "
                          "characterization slice only")
     ap.add_argument("--out", default="BENCH.json",
-                    help="artifact path (e.g. BENCH_PR3.json)")
+                    help="artifact path (e.g. BENCH_PR4.json)")
     ap.add_argument("--pr-tag", default=None,
                     help="free-form tag recorded in settings.pr_tag")
     ap.add_argument("--requests", type=int, default=None)

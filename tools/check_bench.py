@@ -22,7 +22,7 @@ Two layers:
   differences; ``--force-ratio`` overrides), and absolute timings only gate
   under ``--strict-timing`` (same-machine diffs).
 
-    python tools/check_bench.py BENCH_PR3.json BENCH_ci.json [--threshold 0.25]
+    python tools/check_bench.py BENCH_PR4.json BENCH_ci.json [--threshold 0.25]
 """
 from __future__ import annotations
 
