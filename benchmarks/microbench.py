@@ -6,8 +6,6 @@ measurement of the same microbenchmark shape on the current JAX backend.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core import characterize as ch
 from repro.core.perfmodel import DpuModel, DpuSystemModel
 

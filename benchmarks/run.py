@@ -98,7 +98,7 @@ def main() -> None:
 
     if args.banks:
         env = dict(os.environ,
-                   XLA_FLAGS=f"--xla_force_host_platform_device_count="
+                   XLA_FLAGS="--xla_force_host_platform_device_count="
                              f"{args.banks}")
         cmd = [sys.executable, "-m", "benchmarks.run", "--suite", args.suite]
         if args.full:

@@ -58,7 +58,7 @@ def _check_registry_coverage() -> None:
               for label in e.run_variants()}
     if set(WORKLOADS) != labels:
         raise AssertionError(
-            f"system_compare.WORKLOADS out of sync with prim.registry: "
+            "system_compare.WORKLOADS out of sync with prim.registry: "
             f"missing={sorted(labels - set(WORKLOADS))} "
             f"extra={sorted(set(WORKLOADS) - labels)}")
 

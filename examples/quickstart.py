@@ -22,8 +22,8 @@ from repro.prim import hist, scan, va
 def main():
     with pim.session() as s:
         print(f"bank grid: {s.n_banks} bank(s) "
-              f"(run with XLA_FLAGS=--xla_force_host_platform_device_count=8 "
-              f"for a multi-bank grid)")
+              "(run with XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+              "for a multi-bank grid)")
         rng = np.random.default_rng(0)
 
         a = rng.integers(0, 100, 1 << 20).astype(np.int32)

@@ -56,7 +56,7 @@ def main(autotune: bool = True):
     for r in s.telemetry.records:
         by_batch.setdefault(r.batch_id, []).append(r)
     print(f"{len(by_batch)} batches "
-          f"(size-aware same-workload coalescing):")
+          "(size-aware same-workload coalescing):")
     serialized_only = {e.name for e in entries if not e.pipelineable}
     for bid in sorted(by_batch):
         rs = by_batch[bid]

@@ -52,7 +52,7 @@ def main():
     print(f"\nloss: {hist[0]:.3f} → {hist[-1]:.3f} over {len(hist)} steps")
     print(f"straggler flags: {monitor.flagged}")
     print(f"checkpoints: {ck.all_steps()} in {args.ckpt_dir} "
-          f"(re-run to resume from the latest)")
+          "(re-run to resume from the latest)")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,14 @@
 """Core: the paper's contribution — banked (PIM-style) execution, analytical
 performance models, characterization harness, host↔bank transfer engine."""
-from .banked import AXIS, BankGrid, make_bank_grid, assert_collective_free
+from .banked import (AXIS, RANK_AXIS, BankGrid, RankGrid, make_bank_grid,
+                     make_rank_grid, assert_collective_free)
 from .perfmodel import (DpuModel, DpuSystemModel, TpuModel, RooflineTerms,
                         model_flops_train, model_flops_decode)
 from . import characterize, hlo, transfer
 
 __all__ = [
-    "AXIS", "BankGrid", "make_bank_grid", "assert_collective_free",
+    "AXIS", "RANK_AXIS", "BankGrid", "RankGrid", "make_bank_grid",
+    "make_rank_grid", "assert_collective_free",
     "DpuModel", "DpuSystemModel", "TpuModel", "RooflineTerms",
     "model_flops_train", "model_flops_decode",
     "characterize", "hlo", "transfer",

@@ -27,7 +27,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Sequence
+import os
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -38,15 +39,60 @@ from . import hlo
 from .compat import shard_map
 
 AXIS = "banks"
+RANK_AXIS = "ranks"
+
+#: Environment override for the default rank count (CI's rank-shaped tier-1
+#: matrix leg exports REPRO_RANKS=2): ``make_bank_grid()`` upgrades to a
+#: :class:`RankGrid` when the device count divides evenly, and silently
+#: stays flat otherwise (a 1-device dev box must keep working with the
+#: variable exported).
+RANKS_ENV = "REPRO_RANKS"
 
 
-def make_bank_grid(n_banks: int | None = None) -> "BankGrid":
+def _env_ranks() -> int:
+    try:
+        return int(os.environ.get(RANKS_ENV) or 1)
+    except ValueError:
+        return 1
+
+
+def make_bank_grid(n_banks: int | None = None, *,
+                   ranks: int | None = None) -> "BankGrid":
+    """Grid over the first ``n_banks`` devices (default: all).  ``ranks``
+    (default: the ``REPRO_RANKS`` env var) groups the banks into a two-level
+    :class:`RankGrid`; an explicit ``ranks`` that does not divide the bank
+    count raises, an env-derived one falls back to the flat grid."""
     devs = jax.devices()
     n = n_banks or len(devs)
     if n > len(devs):
         raise ValueError(f"need {n} devices, have {len(devs)}")
     mesh = Mesh(np.array(devs[:n]), (AXIS,))
+    if ranks is None:
+        env = _env_ranks()
+        ranks = env if env > 1 and n % env == 0 else 1
+    if ranks > 1:
+        return RankGrid(mesh=mesh, n_ranks=ranks)
     return BankGrid(mesh=mesh)
+
+
+def make_rank_grid(n_ranks: int, banks_per_rank: int | None = None
+                   ) -> "RankGrid":
+    """A two-level rank × bank grid: ``n_ranks`` ranks of ``banks_per_rank``
+    banks each (default: every available device, split evenly)."""
+    devs = jax.devices()
+    if n_ranks < 1:
+        raise ValueError(f"n_ranks must be >= 1, got {n_ranks}")
+    if banks_per_rank is None:
+        if len(devs) % n_ranks:
+            raise ValueError(f"{len(devs)} devices do not split into "
+                             f"{n_ranks} equal ranks; pass banks_per_rank")
+        banks_per_rank = len(devs) // n_ranks
+    need = n_ranks * banks_per_rank
+    if need > len(devs):
+        raise ValueError(f"need {need} devices for {n_ranks}x"
+                         f"{banks_per_rank} ranks x banks, have {len(devs)}")
+    mesh = Mesh(np.array(devs[:need]), (AXIS,))
+    return RankGrid(mesh=mesh, n_ranks=n_ranks)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,6 +196,69 @@ class BankGrid:
 
 
 # ---------------------------------------------------------------------------
+# rank hierarchy (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RankGrid(BankGrid):
+    """Two-level rank × bank grid — the real UPMEM topology (DESIGN.md §10).
+
+    A deployed UPMEM system is 32–40 *ranks* of 64 DPUs each, and CPU↔DPU
+    transfers to different ranks proceed in parallel (paper §5;
+    arXiv:2110.01709).  A ``RankGrid`` reproduces that structure on top of
+    the flat bank model:
+
+    * it IS-A :class:`BankGrid` over all ``n_ranks * banks_per_rank``
+      devices — the *flat view* — so every existing consumer (serialized
+      ``pim()``, characterization sweeps, the transfer engine) keeps
+      working unchanged;
+    * :meth:`rank_view` exposes each rank as an independent flat
+      ``BankGrid`` over its own devices — what the rank-parallel transfer
+      engine (``core.transfer``) and the per-rank chunk pipelines
+      (``runtime.pipeline.run_pipelined_ranked``) operate on;
+    * :attr:`mesh2d` is the explicit 2-D ``(rank, bank)`` mesh for code
+      that wants named two-level axes.
+    """
+
+    n_ranks: int = 1
+
+    def __post_init__(self):
+        total = self.mesh.shape[AXIS]
+        if self.n_ranks < 1:
+            raise ValueError(f"n_ranks must be >= 1, got {self.n_ranks}")
+        if total % self.n_ranks:
+            raise ValueError(f"{total} banks do not split into "
+                             f"{self.n_ranks} equal ranks")
+
+    @property
+    def banks_per_rank(self) -> int:
+        return self.n_banks // self.n_ranks
+
+    @functools.cached_property
+    def mesh2d(self) -> Mesh:
+        """The explicit two-level mesh: shape (n_ranks, banks_per_rank),
+        axes (RANK_AXIS, AXIS)."""
+        devs = np.array(list(self.mesh.devices.flat))
+        return Mesh(devs.reshape(self.n_ranks, self.banks_per_rank),
+                    (RANK_AXIS, AXIS))
+
+    @functools.cached_property
+    def rank_views(self) -> tuple[BankGrid, ...]:
+        """One flat ``BankGrid`` per rank, over that rank's devices only.
+        Cached: phase callables jit-cache per view (``@functools.cache``
+        keyed on the grid), so views must be stable objects."""
+        devs = list(self.mesh.devices.flat)
+        b = self.banks_per_rank
+        return tuple(
+            BankGrid(mesh=Mesh(np.array(devs[r * b:(r + 1) * b]), (AXIS,)))
+            for r in range(self.n_ranks))
+
+    def rank_view(self, rank: int) -> BankGrid:
+        """Rank ``rank`` as an independent flat grid (its "64 DPUs")."""
+        return self.rank_views[rank]
+
+
+# ---------------------------------------------------------------------------
 # verification: a bank-local phase must not communicate
 # ---------------------------------------------------------------------------
 
@@ -164,4 +273,4 @@ def assert_collective_free(fn: Callable, *args) -> None:
     if b > 0:
         raise AssertionError(
             f"bank-local phase lowered to {b} collective bytes — DPUs cannot "
-            f"communicate; move this traffic into an explicit exchange phase")
+            "communicate; move this traffic into an explicit exchange phase")

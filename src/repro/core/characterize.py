@@ -226,6 +226,52 @@ def bank_compute_sweep(grid: BankGrid, nbytes=(1 << 18, 1 << 20, 1 << 22),
     return rows
 
 
+# -- rank-level transfer scaling (paper §5; DESIGN.md §10) -------------------
+
+def rank_parallel_sweep(grid, rank_counts=None, nbytes: int = 1 << 22,
+                        reps: int = 5) -> list[dict]:
+    """CPU↔bank transfer time vs number of concurrently-addressed ranks at
+    fixed total payload — the backend's analogue of the paper's rank-level
+    CPU-DPU bandwidth scaling (transfers to different ranks proceed in
+    parallel, so aggregate bandwidth grows ~×ranks).  ``grid`` must be a
+    :class:`~repro.core.banked.RankGrid`; ``rank_counts`` defaults to the
+    divisors of its rank count.  The autotuner feeds these rows into the
+    rank dimension of every TunedPlan (DESIGN.md §8 and §10)."""
+    n_ranks = getattr(grid, "n_ranks", 1)
+    if rank_counts is None:
+        rank_counts = [r for r in range(1, n_ranks + 1) if n_ranks % r == 0]
+    rows = []
+    for r in rank_counts:
+        banks = r * grid.n_banks // n_ranks
+        per_rank = [np.zeros((grid.n_banks // n_ranks,
+                              max(nbytes // 8 // banks, 1)), np.int64)
+                    for _ in range(r)]
+        views = ([grid.rank_view(i) for i in range(r)]
+                 if hasattr(grid, "rank_view") else [grid])
+        if len(views) < r:
+            raise ValueError(f"rank_parallel_sweep needs a RankGrid to "
+                             f"address {r} ranks; got a flat grid")
+
+        def push():
+            return [v.to_banks(x) for v, x in zip(views, per_rank)]
+
+        push_s = _time(push, reps=reps)
+        devs = push()
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            resolve = tx.pull_ranks_async(devs)
+            resolve()
+            ts.append(time.perf_counter() - t0)
+        total = sum(x.nbytes for x in per_rank)
+        pull_s = float(np.median(ts))
+        rows.append({"ranks": r, "banks": banks, "nbytes": total,
+                     "push_s": push_s, "pull_s": pull_s,
+                     "push_gbps": total / push_s / 1e9,
+                     "pull_gbps": total / pull_s / 1e9})
+    return rows
+
+
 # -- §3.4 CPU<->bank transfers (Fig. 10) -------------------------------------
 
 def transfer_sweep(grid: BankGrid, mb_per_bank: int = 4) -> list[dict]:

@@ -25,7 +25,7 @@ import jax
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from .banked import BankGrid
+from .banked import BankGrid, RankGrid
 
 
 @dataclasses.dataclass
@@ -99,6 +99,20 @@ def split_chunks(x: np.ndarray, n_chunks: int, axis: int = 0):
         sl[axis] = slice(i * per, (i + 1) * per)
         chunks.append(x[tuple(sl)])
     return chunks, n
+
+
+def split_chunks_ranked(x: np.ndarray, n_ranks: int, n_chunks: int,
+                        axis: int = 0):
+    """Rank-granular :func:`split_chunks`: ``n_ranks`` contiguous groups of
+    ``n_chunks`` equal chunks each — rank r's pipeline owns group r, and
+    concatenating the groups in rank order restores the flat split order
+    (so order-sensitive merges like SCAN's running offset stay correct).
+    Returns (per_rank_chunk_lists, orig_len)."""
+    if n_ranks < 1:
+        raise ValueError(f"n_ranks must be >= 1, got {n_ranks}")
+    chunks, n = split_chunks(x, n_ranks * n_chunks, axis)
+    return [chunks[r * n_chunks:(r + 1) * n_chunks]
+            for r in range(n_ranks)], n
 
 
 # -- transfer modes ----------------------------------------------------------
@@ -175,3 +189,45 @@ def pull_serial(grid: BankGrid, xs: Sequence):
     nbytes = sum(_nbytes(h) for h in host)
     return host, TransferRecord("dpu_cpu_serial", nbytes,
                                 time.perf_counter() - t0)
+
+
+# -- rank-parallel transfers (DESIGN.md §10) ---------------------------------
+#
+# On a real UPMEM system CPU↔DPU transfers to *different ranks* proceed in
+# parallel, so aggregate CPU-DPU bandwidth grows ~×ranks (paper §5,
+# arXiv:2110.01709 Fig. 5).  These helpers reproduce that: one async
+# enqueue per rank, none blocking, so the copies to all ranks are in flight
+# concurrently.  ``core.characterize.rank_parallel_sweep`` measures the
+# achieved scaling and the autotuner consumes it (DESIGN.md §8 and §10).
+
+def push_ranks_async(grid: RankGrid, per_rank: Sequence, spec: P | None = None):
+    """Rank-parallel CPU→bank scatter: issue ``per_rank[r]`` to rank ``r``'s
+    banks for every rank concurrently (no completion barrier).  Returns
+    (per-rank device arrays, TransferRecord accounting enqueue cost)."""
+    if len(per_rank) > grid.n_ranks:
+        raise ValueError(f"{len(per_rank)} payloads for {grid.n_ranks} ranks")
+    t0 = time.perf_counter()
+    outs = [grid.rank_view(r).to_banks(x, spec)
+            for r, x in enumerate(per_rank)]
+    nbytes = sum(_nbytes(np.asarray(x)) for x in per_rank)
+    return outs, TransferRecord("cpu_dpu_rank_async", nbytes,
+                                time.perf_counter() - t0)
+
+
+def pull_ranks_async(xs: Sequence):
+    """Begin async bank→CPU copies from every rank at once; returns
+    ``resolve()`` which blocks for all of them and yields
+    (host_arrays, TransferRecord) — the rank-parallel :func:`pull_async`."""
+    for x in xs:
+        try:
+            x.copy_to_host_async()
+        except AttributeError:
+            pass
+
+    def resolve():
+        t0 = time.perf_counter()
+        host = [np.asarray(jax.device_get(x)) for x in xs]
+        nbytes = sum(_nbytes(h) for h in host)
+        return host, TransferRecord("dpu_cpu_rank_async", nbytes,
+                                    time.perf_counter() - t0)
+    return resolve

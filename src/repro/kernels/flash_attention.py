@@ -80,8 +80,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
     @pl.when(j == nk - 1)
     def _finalize():
-        l = l_ref[...]
-        l_safe = jnp.where(l == 0.0, 1.0, l)
+        lsum = l_ref[...]
+        l_safe = jnp.where(lsum == 0.0, 1.0, lsum)
         o_ref[0, 0, :, :] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
 
 

@@ -14,7 +14,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import flash_attention as _fa
 from . import gemv as _gemv

@@ -9,12 +9,9 @@ WRAM-side gather — paper Key Obs. 3: WRAM access pattern doesn't matter).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.compat import tpu_compiler_params
 

@@ -8,11 +8,8 @@ covers every (arch × decode shape) cell, including long_500k.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import transformer

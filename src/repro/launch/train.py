@@ -17,13 +17,9 @@ elastic restart (restore onto whatever mesh is alive).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import optim
 from repro.core.compat import shard_map

@@ -18,7 +18,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 Params = Any          # nested dict of arrays

@@ -10,10 +10,7 @@ Block kinds: attn | mamba | mlstm | slstm | cross;  FFN: dense | moe | none.
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

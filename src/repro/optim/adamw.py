@@ -7,8 +7,6 @@ elastic-resharding path (runtime/elastic.py) can treat it like params.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
@@ -38,7 +36,8 @@ def schedule(cfg: AdamWConfig, step):
 
 def init(params) -> dict:
     """Optimizer state: f32 master copy + first/second moments + step."""
-    f32 = lambda p: p.astype(jnp.float32)
+    def f32(p):
+        return p.astype(jnp.float32)
     return {
         "master": jax.tree.map(f32, params),
         "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),

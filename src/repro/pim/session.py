@@ -40,9 +40,9 @@ from typing import TYPE_CHECKING, Any, Iterable, Mapping, Sequence
 
 import numpy as np
 
-from repro.core.banked import BankGrid, make_bank_grid
+from repro.core.banked import BankGrid, make_bank_grid, make_rank_grid
 from repro.runtime.autotune import DEFAULT_N_CHUNKS, TuningResult
-from repro.runtime.pipeline import run_pipelined_many
+from repro.runtime.pipeline import run_pipelined_ranked
 from repro.runtime.scheduler import PimRequest, PimScheduler
 from repro.runtime.telemetry import Telemetry
 
@@ -52,18 +52,29 @@ if TYPE_CHECKING:  # annotation-only: importing repro.prim pulls the suite
     from repro.runtime.autotune import TunedPlan
 
 
-def session(banks: int | None = None, *, autotune: bool | Mapping = False,
-            **kwargs) -> "PimSession":
+def session(banks: int | None = None, *, ranks: int | None = None,
+            banks_per_rank: int | None = None,
+            autotune: bool | Mapping = False, **kwargs) -> "PimSession":
     """``dpu_alloc`` analogue: allocate a grid of ``banks`` banks (default:
     every available device) and return the session handle that owns it.
 
+    ``ranks``/``banks_per_rank`` allocate the two-level rank × bank
+    hierarchy instead (DESIGN.md §10) — ``pim.session(ranks=2,
+    banks_per_rank=4)`` is 2 ranks of 4 banks, with requests sharded
+    across the ranks and one chunk pipeline per rank.  The default
+    (``ranks=1``-equivalent, or the ``REPRO_RANKS`` env var when set and
+    divisible) keeps today's flat behavior.
+
     ``autotune=True`` calibrates the backend and installs per-workload
-    tuned plans before the first request (DESIGN.md §8); pass a dict
+    tuned plans before the first request (DESIGN.md §8) — including the
+    rank-count dimension on a ranked grid; pass a dict
     (e.g. ``autotune={"reps": 2, "probe": False}``) to forward options to
     :meth:`PimSession.autotune`.  Remaining ``kwargs`` go to
     :class:`PimSession`.
     """
-    return PimSession(banks=banks, autotune=autotune, **kwargs)
+    return PimSession(banks=banks, ranks=ranks,
+                      banks_per_rank=banks_per_rank, autotune=autotune,
+                      **kwargs)
 
 
 def registry() -> Mapping[str, "WorkloadEntry"]:
@@ -83,15 +94,35 @@ class PimSession:
 
     def __init__(self, grid: BankGrid | None = None, *,
                  banks: int | None = None,
+                 ranks: int | None = None,
+                 banks_per_rank: int | None = None,
                  autotune: bool | Mapping = False,
                  plans: Mapping[str, "TunedPlan"] | TuningResult | None = None,
                  n_chunks: int = DEFAULT_N_CHUNKS,
                  max_batch_requests: int = 8,
                  max_batch_bytes: int = 256 << 20,
                  telemetry: Telemetry | None = None):
-        if grid is not None and banks is not None:
-            raise ValueError("pass either grid= or banks=, not both")
-        self._grid = grid if grid is not None else make_bank_grid(banks)
+        if grid is not None and (banks is not None or ranks is not None
+                                 or banks_per_rank is not None):
+            raise ValueError("pass either grid= or a banks/ranks shape, "
+                             "not both")
+        if banks_per_rank is not None and ranks is None:
+            raise ValueError("banks_per_rank= needs ranks=")
+        if grid is not None:
+            self._grid = grid
+        elif ranks is not None:
+            if banks is not None and banks_per_rank is not None \
+                    and banks != ranks * banks_per_rank:
+                raise ValueError(f"banks={banks} != ranks*banks_per_rank="
+                                 f"{ranks * banks_per_rank}")
+            if banks_per_rank is None and banks is not None:
+                if banks % ranks:
+                    raise ValueError(f"banks={banks} does not split into "
+                                     f"{ranks} equal ranks")
+                banks_per_rank = banks // ranks
+            self._grid = make_rank_grid(ranks, banks_per_rank)
+        else:
+            self._grid = make_bank_grid(banks)
         self._tuning: TuningResult | None = None
         if isinstance(plans, TuningResult):
             self._tuning, plans = plans, plans.plans
@@ -117,6 +148,15 @@ class PimSession:
     @property
     def n_banks(self) -> int:
         return self._grid.n_banks
+
+    @property
+    def n_ranks(self) -> int:
+        """Rank count of the owned grid (1 on a flat grid) — DESIGN.md §10."""
+        return getattr(self._grid, "n_ranks", 1)
+
+    @property
+    def banks_per_rank(self) -> int:
+        return self.n_banks // self.n_ranks
 
     @property
     def scheduler(self) -> PimScheduler:
@@ -159,7 +199,7 @@ class PimSession:
     def _check_open(self, verb: str) -> None:
         if self._closed:
             raise RuntimeError(f"{verb}() on a closed PimSession — the "
-                               f"banks were released at close()")
+                               "banks were released at close()")
 
     # -- tuning ---------------------------------------------------------------
 
@@ -228,7 +268,7 @@ class PimSession:
                 self._sched.drain()
             return [r.result() for r in reqs]
         records = [self._sched.make_record(workload, a) for a in args_list]
-        results = run_pipelined_many(
+        results = run_pipelined_ranked(
             self._grid, self._sched.workloads[workload], args_list,
             n_chunks=self._sched.n_chunks,
             plan=self._sched.plans.get(workload), records=records)
@@ -296,6 +336,8 @@ class PimSession:
     def __repr__(self) -> str:
         state = ("closed" if self._closed
                  else "serving" if self._serving else "open")
-        return (f"PimSession({self.n_banks} banks, {state}, "
+        shape = (f"{self.n_ranks}x{self.banks_per_rank} ranks x banks"
+                 if self.n_ranks > 1 else f"{self.n_banks} banks")
+        return (f"PimSession({shape}, {state}, "
                 f"{len(self.plans)} tuned plans, "
                 f"{len(self.telemetry)} records)")

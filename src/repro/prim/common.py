@@ -20,8 +20,6 @@ from typing import Callable
 import jax
 import numpy as np
 
-from repro.core.banked import BankGrid
-
 
 @dataclasses.dataclass
 class PhaseTimes:

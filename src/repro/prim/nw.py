@@ -12,8 +12,6 @@ one VPU-wide associative scan instead of a scalar loop.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np

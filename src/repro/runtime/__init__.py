@@ -16,15 +16,19 @@ import importlib
 import warnings
 
 from .autotune import (StageFit, TunedPlan, TuningResult, WorkloadProfile,
-                       autotune, calibrate, plan_for, probe_plan)
-from .pipeline import PipelineResult, run_pipelined, run_pipelined_many
+                       autotune, calibrate, plan_for, probe_plan,
+                       probe_ranks, rank_candidates)
+from .pipeline import (PipelineResult, run_pipelined, run_pipelined_many,
+                       run_pipelined_ranked)
 from .scheduler import PimRequest, PimScheduler
 from .telemetry import RequestRecord, Telemetry
 
 __all__ = ["PipelineResult", "run_pipelined", "run_pipelined_many",
+           "run_pipelined_ranked",
            "PimRequest", "PimScheduler", "RequestRecord", "Telemetry",
            "StageFit", "TunedPlan", "TuningResult", "WorkloadProfile",
-           "autotune", "calibrate", "plan_for", "probe_plan"]
+           "autotune", "calibrate", "plan_for", "probe_plan",
+           "probe_ranks", "rank_candidates"]
 
 #: train-side names that moved behind their submodules (PR 4): old flat
 #: imports still resolve, with a DeprecationWarning pointing at the new home.
@@ -39,7 +43,7 @@ def __getattr__(name):
         mod = _MOVED[name]
         warnings.warn(
             f"repro.runtime.{name} moved to repro.runtime.{mod}; "
-            f"import it from there (the flat re-export will be removed)",
+            "import it from there (the flat re-export will be removed)",
             DeprecationWarning, stacklevel=2)
         return getattr(importlib.import_module(f".{mod}", __name__), name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -49,6 +49,14 @@ measured-best chunk count — the ATLAS/AutoTVM discipline, and what makes
 "tuned beats or ties the fixed default" hold by construction.
 ``runtime/telemetry.py`` records predicted-vs-achieved overlap per request
 so mispredictions stay visible in every bench artifact.
+
+Rank dimension (DESIGN.md §10).  On a :class:`~repro.core.banked.RankGrid`
+every plan additionally carries ``n_ranks`` — how many ranks the pipeline
+shards each request across.  ``core.characterize.rank_parallel_sweep``
+measures how far CPU↔bank transfers actually scale with concurrently-
+addressed ranks (the paper's ~×ranks rank-parallel bandwidth); the
+candidate rank counts (all divisors, 1 = flat pipeline included) are then
+settled end-to-end by ``probe_ranks``, same discipline as the chunk count.
 """
 from __future__ import annotations
 
@@ -155,8 +163,15 @@ class WorkloadProfile:
 
 @dataclasses.dataclass(frozen=True)
 class TunedPlan:
-    """What the scheduler consumes: chunk count + batch size per workload,
-    with the model's predictions kept alongside for telemetry comparison."""
+    """What the scheduler consumes: chunk count, batch size, and (on a
+    RankGrid) rank count per workload, with the model's predictions kept
+    alongside for telemetry comparison.
+
+    ``n_ranks`` is the rank-count dimension (DESIGN.md §10): how many ranks
+    the pipeline shards each request's chunks across.  1 = flat pipeline
+    over all banks (the pre-rank behavior and the only option on a flat
+    grid); ``rank_measured_s`` holds the per-candidate end-to-end
+    measurements the adoption was based on."""
 
     workload: str
     n_chunks: int
@@ -166,6 +181,9 @@ class TunedPlan:
     predicted_overlap: float
     candidate_s: Mapping[int, float] = dataclasses.field(default_factory=dict)
     measured_s: Mapping[int, float] = dataclasses.field(default_factory=dict)
+    n_ranks: int = 1
+    rank_measured_s: Mapping[int, float] = dataclasses.field(
+        default_factory=dict)
 
     def as_dict(self) -> dict:
         return {"workload": self.workload, "n_chunks": self.n_chunks,
@@ -174,7 +192,10 @@ class TunedPlan:
                 "predicted_pipelined_s": self.predicted_pipelined_s,
                 "predicted_overlap": self.predicted_overlap,
                 "candidate_s": {str(k): v for k, v in self.candidate_s.items()},
-                "measured_s": {str(k): v for k, v in self.measured_s.items()}}
+                "measured_s": {str(k): v for k, v in self.measured_s.items()},
+                "n_ranks": self.n_ranks,
+                "rank_measured_s": {str(k): v for k, v
+                                    in self.rank_measured_s.items()}}
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "TunedPlan":
@@ -186,23 +207,31 @@ class TunedPlan:
                    {int(k): float(v)
                     for k, v in d.get("candidate_s", {}).items()},
                    {int(k): float(v)
-                    for k, v in d.get("measured_s", {}).items()})
+                    for k, v in d.get("measured_s", {}).items()},
+                   int(d.get("n_ranks", 1)),
+                   {int(k): float(v)
+                    for k, v in d.get("rank_measured_s", {}).items()})
 
 
 @dataclasses.dataclass
 class TuningResult:
     """Machine-level stage fits + per-workload profiles and plans, JSON
-    round-trippable (embedded verbatim in BENCH_*.json artifacts)."""
+    round-trippable (embedded verbatim in BENCH_*.json artifacts).
+    ``rank_sweep`` carries the per-rank transfer characterization rows
+    (``core.characterize.rank_parallel_sweep``) on a RankGrid, [] on a
+    flat grid."""
 
     stages: dict[str, StageFit]
     profiles: dict[str, WorkloadProfile]
     plans: dict[str, TunedPlan]
+    rank_sweep: list = dataclasses.field(default_factory=list)
 
     def as_dict(self) -> dict:
         return {"stages": {k: v.as_dict() for k, v in self.stages.items()},
                 "profiles": {k: v.as_dict()
                              for k, v in self.profiles.items()},
-                "plans": {k: v.as_dict() for k, v in self.plans.items()}}
+                "plans": {k: v.as_dict() for k, v in self.plans.items()},
+                "rank_sweep": list(self.rank_sweep)}
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "TuningResult":
@@ -211,7 +240,8 @@ class TuningResult:
                    {k: WorkloadProfile.from_dict(v)
                     for k, v in d.get("profiles", {}).items()},
                    {k: TunedPlan.from_dict(v)
-                    for k, v in d.get("plans", {}).items()})
+                    for k, v in d.get("plans", {}).items()},
+                   list(d.get("rank_sweep", [])))
 
 
 # -- calibration -------------------------------------------------------------
@@ -328,6 +358,47 @@ def probe_candidates(plan: TunedPlan, k: int = 2,
     return sorted(set(out))
 
 
+def rank_candidates(n_ranks: int) -> list[int]:
+    """Rank counts worth measuring on an ``n_ranks``-rank grid: every
+    divisor (1 stays in — the flat pipeline is the baseline the rank
+    sharding must beat or tie)."""
+    return [r for r in range(1, n_ranks + 1) if n_ranks % r == 0]
+
+
+def probe_ranks(grid, entry: "WorkloadEntry", plan: TunedPlan,
+                requests: Sequence[tuple],
+                candidates: Sequence[int] | None = None,
+                runner: Callable[[int], float] | None = None) -> TunedPlan:
+    """Measure the rank-count candidates at the plan's chunk count and adopt
+    the measured best (DESIGN.md §10).  ``rank_parallel_sweep`` is the model
+    side — it shows how far transfers scale with ranks — but compute on a
+    shared-core simulation does not scale the same way, so the rank
+    dimension is settled end-to-end like the chunk dimension: the flat
+    pipeline (1 rank) is always in the candidate set, so the adopted plan
+    beats or ties it by construction."""
+    from .pipeline import run_pipelined_ranked
+
+    n_ranks = getattr(grid, "n_ranks", 1)
+    if n_ranks <= 1:
+        return plan
+    if runner is None:
+        import time
+
+        def runner(r: int) -> float:
+            run_pipelined_ranked(grid, entry.chunked, requests,
+                                 n_chunks=plan.n_chunks, n_ranks=r)
+            t0 = time.perf_counter()
+            run_pipelined_ranked(grid, entry.chunked, requests,
+                                 n_chunks=plan.n_chunks, n_ranks=r)
+            return time.perf_counter() - t0
+
+    cand = list(candidates) if candidates is not None \
+        else rank_candidates(n_ranks)
+    measured = {r: runner(r) for r in cand}
+    best = min(cand, key=lambda r: (measured[r], r))
+    return dataclasses.replace(plan, n_ranks=best, rank_measured_s=measured)
+
+
 def probe_plan(grid: BankGrid, entry: "WorkloadEntry", plan: TunedPlan,
                requests: Sequence[tuple],
                candidates: Sequence[int] | None = None,
@@ -372,6 +443,9 @@ def autotune(grid: BankGrid, entries: Sequence["WorkloadEntry"] | None = None,
         entries = [e for e in REGISTRY.values() if e.pipelineable]
     rng = rng if rng is not None else np.random.default_rng(0)
     stages = calibrate(grid, nbytes=calib_nbytes, reps=reps)
+    n_ranks = getattr(grid, "n_ranks", 1)
+    rank_sweep = (ch.rank_parallel_sweep(grid, reps=reps)
+                  if n_ranks > 1 else [])
     profiles: dict[str, WorkloadProfile] = {}
     plans: dict[str, TunedPlan] = {}
     for entry in entries:
@@ -382,6 +456,14 @@ def autotune(grid: BankGrid, entries: Sequence["WorkloadEntry"] | None = None,
         plan = plan_for(prof, candidates)
         if probe:
             plan = probe_plan(grid, entry, plan, [args])
+            if n_ranks > 1:
+                # the rank dimension (DESIGN.md §10) is settled by
+                # measurement — divisor sets are tiny and the flat
+                # pipeline (1 rank) stays in as the must-beat baseline.
+                # Without probing, plans stay rank-agnostic and execution
+                # defers to the grid's rank count (_resolve_ranks).
+                plan = probe_ranks(grid, entry, plan, [args])
         profiles[entry.name] = prof
         plans[entry.name] = plan
-    return TuningResult(stages=stages, profiles=profiles, plans=plans)
+    return TuningResult(stages=stages, profiles=profiles, plans=plans,
+                        rank_sweep=rank_sweep)

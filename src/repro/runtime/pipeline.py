@@ -18,10 +18,20 @@ three-stage software pipeline:
 ``run_pipelined_many`` generalizes to a *stream* of same-workload requests:
 their chunks flow through one pipeline back-to-back, so the banks never
 drain between requests — that is the scheduler's batching payoff.
+
+``run_pipelined_ranked`` adds the second level of the hierarchy
+(DESIGN.md §10): on a :class:`~repro.core.banked.RankGrid` every request's
+chunks are sharded across ranks in contiguous blocks and each rank drives
+its own double-buffered pipeline over its own devices (one thread per rank
+— JAX dispatch to disjoint device sets proceeds concurrently, the analogue
+of the paper's rank-parallel CPU↔DPU transfers).  The host merges each
+request's parts in global chunk order, so order-sensitive merges (SCAN's
+running offset) stay correct.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import TYPE_CHECKING, Any, Sequence
 
@@ -161,4 +171,188 @@ def run_pipelined_many(grid: BankGrid, workload: ChunkedWorkload,
             rec.phases = bucket[i].times
     if _full:
         return results, makespans, [b.times for b in bucket]
+    return results
+
+
+# ---------------------------------------------------------------------------
+# rank-parallel pipelines (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def _resolve_ranks(grid, n_ranks, plan) -> int:
+    """Effective rank count: the plan's measured pick (a probed plan is
+    authoritative even when it adopted 1 — flat measured best), else the
+    caller's, else every rank the grid has — always clamped to the
+    hardware."""
+    have = getattr(grid, "n_ranks", 1)
+    want = n_ranks
+    if plan is not None:
+        probed = bool(getattr(plan, "rank_measured_s", None))
+        if probed or getattr(plan, "n_ranks", 1) > 1:
+            want = plan.n_ranks
+    if want is None:
+        want = have
+    return max(1, min(want, have))
+
+
+def _rank_worker(view, workload, metas, stream, bucket, t_start, t_retired):
+    """One rank's double-buffered pipeline over its assigned chunk stream.
+
+    ``stream`` is an ordered list of (req_idx, global_chunk_idx, chunk);
+    returns {req_idx: [(global_chunk_idx, part), ...]} and stamps
+    ``t_retired[i]`` with the wall time this rank retired request i's last
+    chunk.  Same three-stage loop as :func:`run_pipelined_many`, minus the
+    merge — parts go back to the caller, which merges across ranks in
+    global chunk order."""
+    parts: dict[int, list] = {}
+    if not stream:
+        return parts
+
+    def scatter(k):
+        i, _, chunk = stream[k]
+        if not t_start[i]:
+            t_start[i] = time.perf_counter()
+        ts = time.perf_counter()
+        bufs = workload.scatter(view, metas[i], chunk)
+        bucket[i].add("cpu_dpu", ts)
+        return bufs
+
+    def retire(entry):
+        i, gidx, outs = entry
+        ts = time.perf_counter()
+        parts.setdefault(i, []).append(
+            (gidx, workload.retrieve(view, metas[i], outs)))
+        t_retired[i] = bucket[i].add("dpu_cpu", ts)
+
+    in_flight: list = []
+    bufs = scatter(0)
+    for k in range(len(stream)):
+        i, gidx = stream[k][0], stream[k][1]
+        ts = time.perf_counter()
+        outs = workload.compute(view, metas[i], bufs)
+        bucket[i].add("dpu", ts)
+        if k + 1 < len(stream):
+            bufs = scatter(k + 1)        # overlaps compute of chunk k
+        _host_prefetch(outs)
+        in_flight.append((i, gidx, outs))
+        if len(in_flight) > 1:
+            retire(in_flight.pop(0))
+    while in_flight:
+        retire(in_flight.pop(0))
+    return parts
+
+
+def run_pipelined_ranked(grid, workload: ChunkedWorkload,
+                         requests: Sequence[tuple], n_chunks: int = 4,
+                         n_ranks: int | None = None,
+                         plan: TunedPlan | None = None,
+                         records: Sequence[RequestRecord] | None = None,
+                         _full: bool = False):
+    """Rank-parallel chunk pipelines over a RankGrid (DESIGN.md §10).
+
+    Every request is split into ``n_ranks * n_chunks`` equal chunks sized
+    for one rank's banks; rank r owns the r-th contiguous block and streams
+    it through its own double-buffered pipeline on its own devices (thread
+    per rank).  Per-bank work matches the flat pipeline at the same
+    ``n_chunks`` — a rank's chunk spans ``banks_per_rank`` banks instead of
+    all of them — while transfers and compute for different ranks overlap,
+    modeling the paper's ~×ranks rank-parallel CPU↔DPU bandwidth.
+
+    Degenerates to :func:`run_pipelined_many` on the flat view when one
+    rank is in play, so ``ranks=1`` sessions behave exactly as before.  A
+    :class:`~repro.runtime.autotune.TunedPlan` overrides both ``n_chunks``
+    and (when tuned with a rank dimension) ``n_ranks``.
+    """
+    n_ranks = _resolve_ranks(grid, n_ranks, plan)
+    if plan is not None:
+        n_chunks = plan.n_chunks
+    if n_ranks <= 1:
+        return run_pipelined_many(grid, workload, requests,
+                                  n_chunks=n_chunks, plan=plan,
+                                  records=records, _full=_full)
+    if records is not None and plan is not None:
+        for rec in records:
+            rec.tuned = True
+            rec.predicted_overlap = plan.predicted_overlap
+
+    rep = grid.rank_view(0)          # all views share the per-rank geometry
+    n_req = len(requests)
+    # every rank splits with its *own* view: split is deterministic host
+    # work (identical chunks), but several workloads broadcast per-request
+    # constants to the devices at split time (GEMV's x, BS's array, ...) —
+    # each rank needs those constants on its own banks
+    metas = [[None] * n_req for _ in range(n_ranks)]
+    streams: list[list] = [[] for _ in range(n_ranks)]
+    bucket = [[_Buckets() for _ in range(n_req)] for _ in range(n_ranks)]
+    t_first = [[0.0] * n_req for _ in range(n_ranks)]
+    t_retired = [[0.0] * n_req for _ in range(n_ranks)]
+
+    t0 = time.perf_counter()
+    for i, args in enumerate(requests):
+        per = n_chunks
+        for r in range(n_ranks):
+            metas[r][i], chunks = workload.split(
+                grid.rank_view(r), n_ranks * n_chunks, *args)
+            per = -(-len(chunks) // n_ranks)  # contiguous blocks, rank order
+            streams[r].extend((i, g, chunks[g])
+                              for g in range(r * per,
+                                             min((r + 1) * per, len(chunks))))
+        if records is not None:
+            # n_chunks is the per-pipeline depth (matches the flat path and
+            # the plan's value); total chunks = n_chunks * n_ranks
+            records[i].n_chunks = per
+            records[i].n_ranks = n_ranks
+
+    results: list = [None] * n_req
+    rank_parts: list = [None] * n_ranks
+    errors: list = [None] * n_ranks
+
+    def worker(r):
+        try:
+            rank_parts[r] = _rank_worker(grid.rank_view(r), workload,
+                                         metas[r], streams[r], bucket[r],
+                                         t_first[r], t_retired[r])
+        except BaseException as e:           # noqa: BLE001 — re-raised below
+            errors[r] = e
+
+    threads = [threading.Thread(target=worker, args=(r,),
+                                name=f"pim-rank-{r}", daemon=True)
+               for r in range(1, n_ranks)]
+    for t in threads:
+        t.start()
+    worker(0)                                # rank 0 runs on this thread
+    for t in threads:
+        t.join()
+    for e in errors:
+        if e is not None:
+            raise e
+
+    makespans = [0.0] * n_req
+    phases = []
+    for i in range(n_req):
+        parts = sorted(p for ps in rank_parts for p in ps.get(i, ()))
+        ts = time.perf_counter()
+        results[i] = workload.merge(rep, metas[0][i], [p for _, p in parts])
+        merge_dt = time.perf_counter() - ts
+        times = _phases()
+        for r in range(n_ranks):                 # host-observed, summed over
+            for k in dataclasses.fields(times):  # the rank threads
+                setattr(times, k.name, getattr(times, k.name)
+                        + getattr(bucket[r][i].times, k.name))
+        times.inter_dpu += merge_dt
+        phases.append(times)
+        started = [t_first[r][i] for r in range(n_ranks) if t_first[r][i]]
+        t_start = min(started) if started else t0
+        # a request completes when its last chunk retires on the slowest
+        # rank, plus its merge; merges themselves are deferred to the join,
+        # so stamping merge wall time here would bill early requests in a
+        # batch for the whole stream's tail (the flat path merges eagerly)
+        retired = max(t_retired[r][i] for r in range(n_ranks))
+        t_done = (retired or time.perf_counter()) + merge_dt
+        makespans[i] = t_done - t_start
+        if records is not None:
+            records[i].t_start = t_start
+            records[i].t_finish = t_done
+            records[i].phases = times
+    if _full:
+        return results, makespans, phases
     return results

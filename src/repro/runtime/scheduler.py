@@ -12,7 +12,12 @@ the grid and decides execution order:
 * **tuned plans** — per-workload chunk counts and batch sizes may come from
   the characterization-driven autotuner (``runtime.autotune``, DESIGN.md §8)
   via ``plans=`` or :meth:`PimScheduler.autotuned`; workloads without a plan
-  keep the constructor constants as the untuned fallback.
+  keep the constructor constants as the untuned fallback;
+* **rank-aware placement** — on a :class:`~repro.core.banked.RankGrid`
+  (DESIGN.md §10) every pipelineable batch is sharded across the ranks and
+  served by one chunk pipeline per rank
+  (``pipeline.run_pipelined_ranked``); a tuned plan's measured rank count
+  overrides the grid's.  Serialized-only workloads run on the flat view.
 
 The workload set comes from :mod:`repro.prim.registry`: every registry entry
 is servable.  Pipelineable entries run through the chunk pipeline;
@@ -45,7 +50,7 @@ import numpy as np
 from repro.core.banked import BankGrid
 from repro.core.transfer import tree_nbytes as _nbytes
 
-from .pipeline import run_pipelined_many
+from .pipeline import run_pipelined_ranked
 from .telemetry import RequestRecord, Telemetry, now
 
 if TYPE_CHECKING:  # annotation-only: importing repro.prim pulls the suite
@@ -224,7 +229,10 @@ class PimScheduler:
         for rec in records:
             rec.batch_id = bid
         try:
-            results = run_pipelined_many(
+            # rank-aware placement (DESIGN.md §10): on a RankGrid the batch
+            # is sharded across ranks, one chunk pipeline per rank; on a
+            # flat grid this is exactly run_pipelined_many
+            results = run_pipelined_ranked(
                 self.grid, self.workloads[batch[0].workload],
                 [r.args for r in batch], n_chunks=self.n_chunks,
                 plan=self.plans.get(batch[0].workload),

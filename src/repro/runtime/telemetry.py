@@ -42,6 +42,7 @@ class RequestRecord:
     bytes_out: int = 0
     priority: int = 0
     n_chunks: int = 1
+    n_ranks: int = 1            # ranks the chunks were sharded across
     batch_id: int = -1
     t_submit: float = 0.0
     t_start: float = 0.0
@@ -90,7 +91,7 @@ class RequestRecord:
         return {"request": self.request_id, "workload": self.workload,
                 "banks": n_banks, "items": self.n_items,
                 "priority": self.priority, "chunks": self.n_chunks,
-                "batch": self.batch_id,
+                "ranks": self.n_ranks, "batch": self.batch_id,
                 "queue_wait_s": self.queue_wait,
                 "service_s": self.service_s, "latency_s": self.latency_s,
                 "cpu_dpu_s": self.phases.cpu_dpu, "dpu_s": self.phases.dpu,

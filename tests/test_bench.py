@@ -1,8 +1,8 @@
 """Bench artifact layer: tools/bench.py produces a schema-valid document
-that survives a JSON round trip, tools/check_bench.py validates schemas and
-catches regressions, and the committed BENCH_PR4.json baseline is valid."""
+that survives a JSON round trip, tools/check_bench.py validates schemas,
+the monotone weak-scaling invariant, and regressions, and the committed
+BENCH_PR5.json baseline is valid."""
 import json
-import os
 import pathlib
 import sys
 
@@ -43,7 +43,14 @@ def test_collect_contents(doc, bank_grid):
     assert nw["reason"]                      # registry reason rides along
     assert va["tuned"]["overlap_speedup"] >= va["fixed"]["overlap_speedup"]
     assert "plans" in doc["model"] and "VA" in doc["model"]["plans"]
-    assert doc["micro"] and doc["scaling"]
+    assert doc["micro"]
+    scaling = doc["scaling"]
+    assert set(scaling) == {"banks", "rank_strong", "rank_weak",
+                            "weak_gated"}
+    assert isinstance(scaling["weak_gated"], bool)
+    assert scaling["banks"]                      # bank-axis phase breakdown
+    if doc["env"]["n_devices"] >= 2:             # rank rows need >= 2 banks
+        assert scaling["rank_strong"] and scaling["rank_weak"]
 
 
 def test_compare_identical_passes(doc):
@@ -115,6 +122,80 @@ def test_validate_rejects_wrong_schema(doc):
     assert any("schema" in e for e in check_bench.validate(bad))
 
 
+# -- the monotone weak-scaling invariant (rank hierarchy, DESIGN.md §10) ------
+
+def _weak_row(workload, ranks, gbps):
+    return {"workload": workload, "ranks": ranks, "seconds": 0.1,
+            "gbps": gbps}
+
+
+def test_validate_weak_scaling_invariant(doc):
+    cur = json.loads(json.dumps(doc))
+    cur["scaling"]["rank_weak"] = [_weak_row("VA", 1, 1.0),
+                                   _weak_row("VA", 2, 0.9)]   # within 25%
+    assert check_bench.validate(cur) == []
+    cur["scaling"]["rank_weak"] = [_weak_row("VA", 1, 1.0),
+                                   _weak_row("VA", 2, 0.5)]   # > 25% drop
+    errs = check_bench.validate(cur)
+    assert any("weak-scaling throughput degrades" in e for e in errs)
+
+
+def test_validate_weak_scaling_sorts_by_rank_count(doc):
+    """Rows arrive in sweep order, not necessarily rank order."""
+    cur = json.loads(json.dumps(doc))
+    cur["scaling"]["rank_weak"] = [_weak_row("VA", 4, 4.0),
+                                   _weak_row("VA", 1, 1.0),
+                                   _weak_row("VA", 2, 2.0)]
+    assert check_bench.validate(cur) == []
+
+
+def test_validate_weak_rows_must_be_well_formed(doc):
+    cur = json.loads(json.dumps(doc))
+    cur["scaling"]["rank_weak"] = [{"workload": "VA"}]
+    assert any("missing" in e for e in check_bench.validate(cur))
+    cur["scaling"]["rank_weak"] = [_weak_row("VA", 1, 0.0)]
+    assert any("gbps" in e for e in check_bench.validate(cur))
+
+
+def test_weak_gated_false_skips_the_monotone_check(doc):
+    """weak_gated=false records that THIS host cannot sustain rank
+    weak-scaling (oversubscribed simulated devices): row shape is still
+    validated, the monotone invariant is not."""
+    cur = json.loads(json.dumps(doc))
+    cur["scaling"]["rank_weak"] = [_weak_row("VA", 1, 1.0),
+                                   _weak_row("VA", 2, 0.5)]   # > 25% drop
+    cur["scaling"]["weak_gated"] = False
+    assert check_bench.validate(cur) == []
+    cur["scaling"]["rank_weak"] = [{"workload": "VA"}]   # malformed rows
+    assert any("missing" in e for e in check_bench.validate(cur))
+
+
+def test_compare_flags_weak_gated_loss_same_env_only(doc):
+    base = json.loads(json.dumps(doc))
+    base["scaling"]["rank_weak"] = [_weak_row("VA", 1, 1.0),
+                                    _weak_row("VA", 2, 1.0)]
+    base["scaling"]["weak_gated"] = True
+    cur = json.loads(json.dumps(base))
+    cur["scaling"]["rank_weak"] = [_weak_row("VA", 1, 1.0),
+                                   _weak_row("VA", 2, 0.5)]
+    cur["scaling"]["weak_gated"] = False
+    errs = check_bench.compare(base, cur)           # same environment
+    assert any("weak_gated" in e for e in errs)
+    cur["env"]["platform"] = "other-machine"        # cross-env: note only
+    notes: list = []
+    assert check_bench.compare(base, cur, notes=notes) == []
+    assert any("weak-scaling invariant" in n for n in notes)
+
+
+def test_validate_requires_rank_rows_on_multibank_artifacts(doc):
+    cur = json.loads(json.dumps(doc))
+    cur["scaling"]["rank_weak"] = []
+    cur["settings"]["banks"] = 8
+    assert any("rank_weak" in e for e in check_bench.validate(cur))
+    cur["settings"]["banks"] = 1
+    assert check_bench.validate(cur) == []
+
+
 def test_validate_enforces_tuned_beats_or_ties_fixed(doc):
     bad = json.loads(json.dumps(doc))
     bad["workloads"]["VA"]["tuned"]["overlap_speedup"] = (
@@ -137,8 +218,8 @@ def test_check_bench_cli(doc, tmp_path):
 # -- the committed baseline CI gates against ----------------------------------
 
 def test_committed_baseline_is_valid():
-    path = ROOT / "BENCH_PR4.json"
-    assert path.exists(), "BENCH_PR4.json baseline missing from repo root"
+    path = ROOT / "BENCH_PR5.json"
+    assert path.exists(), "BENCH_PR5.json baseline missing from repo root"
     base = json.loads(path.read_text())
     assert check_bench.validate(base) == []
     # generated at the CI bench-smoke shape: 8 simulated banks, full registry

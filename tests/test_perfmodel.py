@@ -1,6 +1,5 @@
 """The analytical DPU model must reproduce the paper's published
 measurements (Figs. 4-6, §3) — this is the quantitative reproduction gate."""
-import numpy as np
 import pytest
 
 from repro.core.perfmodel import (DpuModel, DpuSystemModel, RooflineTerms,

@@ -111,7 +111,8 @@ def test_scan(bank_grid, rng, variant, via):
 
 
 def test_trns(bank_grid, rng):
-    x = rng.normal(size=(64, 48)).astype(np.float32)
+    # N = 128, n = 8 -> N' = 16: divides any simulated bank count up to 16
+    x = rng.normal(size=(64, 128)).astype(np.float32)
     out, _ = prim.trns.pim(bank_grid, x, m=8, n=8)
     assert (out == prim.trns.ref(x)).all()
 

@@ -10,7 +10,7 @@ from hypothesis import given, settings, strategies as st
 from repro import prim
 from repro.core import make_bank_grid
 from repro.core.transfer import from_banked, to_banked
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 GRID = None
 

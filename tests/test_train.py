@@ -1,31 +1,40 @@
 """Training substrate integration: fit() convergence, checkpoint/restart
 exactness, elastic resharding, straggler monitor."""
-import os
+import math
 import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import optim
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config
 from repro.data import DataConfig, Loader
 from repro.launch import train as train_mod
-from repro.runtime.elastic import (carve_mesh, reshard, shardings_for,
-                                   simulate_failure)
+from repro.runtime.elastic import carve_mesh, reshard, simulate_failure
 from repro.runtime.straggler import StepMonitor
 
 
 def _mesh():
-    return carve_mesh(jax.devices(), model_parallel=1)
+    # cap the data axis at 8 so batch sizes stay test-small on bigger
+    # simulated hosts (the 16-device CI rank leg runs the same 8-way mesh)
+    return carve_mesh(jax.devices()[:min(8, len(jax.devices()))],
+                      model_parallel=1)
+
+
+def _batch(base: int, microbatches: int = 1) -> int:
+    """Smallest batch >= base that shards evenly over the data axis and
+    splits into ``microbatches`` — batches must divide the mesh, whatever
+    device count the CI matrix leg simulates."""
+    unit = math.lcm(_mesh().shape["data"], microbatches)
+    return -(-base // unit) * unit
 
 
 def test_fit_loss_decreases():
     cfg = get_config("tinyllama-1.1b", smoke=True)
     mesh = _mesh()
-    loader = Loader(cfg, DataConfig(batch=4, seq=32))
+    loader = Loader(cfg, DataConfig(batch=_batch(4), seq=32))
     _, _, hist = train_mod.fit(cfg, mesh=mesh, steps=20, data_loader=loader,
                                ocfg=optim.AdamWConfig(
                                    lr=3e-3, warmup_steps=2, total_steps=20),
@@ -41,18 +50,18 @@ def test_checkpoint_restart_exact():
     ocfg = optim.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=12)
 
     p_full, _, _ = train_mod.fit(cfg, mesh=mesh, steps=12,
-                                 data_loader=Loader(cfg, DataConfig(batch=2, seq=16)),
+                                 data_loader=Loader(cfg, DataConfig(batch=_batch(2), seq=16)),
                                  ocfg=ocfg, log_every=0)
 
     with tempfile.TemporaryDirectory() as d:
         ck = Checkpointer(d, keep=2)
         train_mod.fit(cfg, mesh=mesh, steps=6,
-                      data_loader=Loader(cfg, DataConfig(batch=2, seq=16)),
+                      data_loader=Loader(cfg, DataConfig(batch=_batch(2), seq=16)),
                       ocfg=ocfg, checkpointer=ck, checkpoint_every=6,
                       log_every=0)
         assert ck.latest_step() == 6
         p_res, _, _ = train_mod.fit(cfg, mesh=mesh, steps=12,
-                                    data_loader=Loader(cfg, DataConfig(batch=2, seq=16)),
+                                    data_loader=Loader(cfg, DataConfig(batch=_batch(2), seq=16)),
                                     ocfg=ocfg, checkpointer=ck,
                                     checkpoint_every=0, log_every=0)
     flat1 = jax.tree.leaves(p_full)
@@ -106,7 +115,7 @@ def test_microbatched_step_matches_single():
     ocfg = optim.AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10)
     from repro.data import make_batch, DataConfig
     batch = train_mod.shard_batch(
-        make_batch(cfg, DataConfig(batch=4, seq=16), 0), cfg, mesh)
+        make_batch(cfg, DataConfig(batch=_batch(4, 4), seq=16), 0), cfg, mesh)
     s1 = train_mod.make_train_step(cfg, ocfg, mesh, specs, microbatches=1,
                                    donate=False)
     s4 = train_mod.make_train_step(cfg, ocfg, mesh, specs, microbatches=4,

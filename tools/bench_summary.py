@@ -1,0 +1,110 @@
+#!/usr/bin/env python
+"""Render a ``BENCH_*.json`` artifact as GitHub job-summary markdown.
+
+The nightly ``bench-full`` workflow (and the PR-gating ``bench-smoke`` job)
+pipe this into ``$GITHUB_STEP_SUMMARY``: the per-workload
+serialized/fixed/tuned table plus the rank-level strong/weak scaling rows,
+readable without downloading the artifact (EXPERIMENTS.md §Bench-artifacts
+and §Scaling).
+
+    python tools/bench_summary.py BENCH_nightly.json >> "$GITHUB_STEP_SUMMARY"
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+
+def _fmt(x, digits=3) -> str:
+    if isinstance(x, float):
+        return f"{x:.{digits}f}"
+    if isinstance(x, int):
+        return str(x)
+    return str(x) if x else "—"
+
+
+def workload_table(doc: dict) -> list[str]:
+    lines = [
+        "| workload | serialized s | fixed ×overlap | tuned ×overlap "
+        "| tuned chunks | tuned ranks | adopted |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    plans = doc.get("model", {}).get("plans", {})
+    for name, w in doc["workloads"].items():
+        if not w["pipelineable"]:
+            lines.append(
+                f"| {name} | {_fmt(w['serialized_s'])} "
+                "| — | — | — | — | serialized-only |"
+            )
+            continue
+        fixed, tuned = w["fixed"], w["tuned"]
+        ranks = plans.get(name, {}).get("n_ranks", 1)
+        lines.append(
+            f"| {name} | {_fmt(w['serialized_s'])} "
+            f"| {_fmt(fixed['overlap_speedup'], 1)} "
+            f"| {_fmt(tuned['overlap_speedup'], 1)} "
+            f"| {tuned['n_chunks']} | {ranks} | {tuned['adopted']} |"
+        )
+    return lines
+
+
+def scaling_table(rows: list, title: str) -> list[str]:
+    if not rows:
+        return []
+    base = rows[0].get("base_ranks", 1)
+    lines = [
+        "",
+        f"#### {title}",
+        "",
+        "| workload | ranks | banks | seconds | GB/s "
+        f"| ×time vs {base} rank(s) | ×throughput vs {base} rank(s) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['workload']} | {r['ranks']} | {r['n_banks']} "
+            f"| {_fmt(r['seconds'], 4)} | {_fmt(r['gbps'])} "
+            f"| {_fmt(r.get('speedup_vs_base', ''), 2)} "
+            f"| {_fmt(r.get('throughput_vs_base', ''), 2)} |"
+        )
+    return lines
+
+
+def summarize(doc: dict) -> str:
+    env, settings = doc["env"], doc["settings"]
+    kind = "smoke" if settings.get("smoke") else "full"
+    lines = [
+        "### PIM bench artifact",
+        "",
+        f"schema `{doc['schema']}` · {settings['banks']} banks · "
+        f"{env['n_devices']} devices · jax {env['jax']} · "
+        f"tag `{settings.get('pr_tag') or '—'}` · {kind} run",
+        "",
+        "#### Per-workload: serialized vs fixed-chunk vs tuned pipeline",
+        "",
+        *workload_table(doc),
+        *scaling_table(
+            doc.get("scaling", {}).get("rank_strong", []),
+            "Rank strong scaling (fixed problem)",
+        ),
+        *scaling_table(
+            doc.get("scaling", {}).get("rank_weak", []),
+            "Rank weak scaling (problem ∝ ranks; gated by check_bench.py)",
+        ),
+    ]
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv:
+        print("usage: bench_summary.py BENCH.json", file=sys.stderr)
+        return 2
+    print(summarize(json.loads(pathlib.Path(argv[0]).read_text())))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,11 +9,16 @@ argument of arXiv:2110.01709 / arXiv:2205.14647).
 
 Two layers:
 
-* ``validate(doc)`` — structural schema check, plus the tuned-pipeline
-  invariant the artifact must carry: for every pipelineable workload the
-  tuned overlap speedup is >= the fixed-chunk baseline's (ties allowed) —
-  the autotuner's probe guarantees it at generation time, this guards the
-  committed file.
+* ``validate(doc)`` — structural schema check, plus two invariants the
+  artifact must carry: for every pipelineable workload the tuned overlap
+  speedup is >= the fixed-chunk baseline's (ties allowed) — the
+  autotuner's probe guarantees it at generation time, this guards the
+  committed file — and the **monotone weak-scaling invariant** on the
+  ``scaling.rank_weak`` rows: with the problem growing ∝ ranks, aggregate
+  throughput must not degrade by more than the tolerance from one rank
+  count to the next (paper §5 / arXiv:2110.01709 — rank-level scaling is
+  the paradigm's headline claim; a regression here means the rank-parallel
+  path stopped scaling).
 * ``compare(base, cur)`` — per-workload gate.  Structural checks (coverage,
   pipelineability, the tuned>=fixed invariant) always apply.  Numeric gates
   are environment-scoped: overlap-speedup ratios only gate when the two
@@ -22,7 +27,7 @@ Two layers:
   differences; ``--force-ratio`` overrides), and absolute timings only gate
   under ``--strict-timing`` (same-machine diffs).
 
-    python tools/check_bench.py BENCH_PR4.json BENCH_ci.json [--threshold 0.25]
+    python tools/check_bench.py BENCH_PR5.json BENCH_ci.json [--threshold 0.25]
 """
 from __future__ import annotations
 
@@ -32,11 +37,15 @@ import math
 import pathlib
 import sys
 
-SCHEMA = "repro-bench/1"
+SCHEMA = "repro-bench/2"
 
 #: relative drop in overlap speedup (or rise in time, with --strict-timing)
 #: tolerated before the gate fails
 DEFAULT_THRESHOLD = 0.25
+
+#: tolerated relative drop in weak-scaling throughput between consecutive
+#: rank counts (the monotone weak-scaling invariant)
+WEAK_SCALING_TOLERANCE = 0.25
 
 _TIE_EPS = 1e-9
 
@@ -71,6 +80,38 @@ def _check_run(run, where: str, errors: list[str],
                           f"got {run.get(key)!r}")
 
 
+def _check_weak_scaling(rows, where: str, errors: list[str],
+                        tol: float = WEAK_SCALING_TOLERANCE) -> None:
+    """The monotone weak-scaling invariant: per workload, sorted by rank
+    count, throughput may not drop more than ``tol`` between consecutive
+    rank counts (problem ∝ ranks, so bytes/s must hold or grow)."""
+    by_wl: dict = {}
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            errors.append(f"{where}[{i}]: must be an object")
+            return
+        for key in ("workload", "ranks", "seconds", "gbps"):
+            if key not in row:
+                errors.append(f"{where}[{i}]: missing {key!r}")
+                return
+        if not _finite_pos(row["gbps"]):
+            errors.append(f"{where}[{i}]: gbps: want finite > 0, "
+                          f"got {row['gbps']!r}")
+            return
+        by_wl.setdefault(row["workload"], []).append(row)
+    for name, wrows in by_wl.items():
+        wrows.sort(key=lambda r: r["ranks"])
+        for prev, cur in zip(wrows, wrows[1:]):
+            if cur["gbps"] < prev["gbps"] * (1.0 - tol):
+                errors.append(
+                    f"{where}: {name} weak-scaling throughput degrades "
+                    f"{prev['gbps']:.3f} -> {cur['gbps']:.3f} GB/s from "
+                    f"{prev['ranks']} -> {cur['ranks']} ranks "
+                    f"(> {tol:.0%} drop) — the rank-parallel path must "
+                    "hold aggregate throughput as the problem grows "
+                    "with the rank count")
+
+
 def validate(doc) -> list[str]:
     """Structural schema check; returns a list of errors (empty = valid)."""
     errors: list[str] = []
@@ -78,7 +119,7 @@ def validate(doc) -> list[str]:
         return ["artifact must be a JSON object"]
     if doc.get("schema") != SCHEMA:
         errors.append(f"schema: want {SCHEMA!r}, got {doc.get('schema')!r}")
-    for key in ("env", "settings", "model", "workloads"):
+    for key in ("env", "settings", "model", "workloads", "scaling"):
         if not isinstance(doc.get(key), dict):
             errors.append(f"missing or non-object top-level key {key!r}")
     if errors:
@@ -89,7 +130,7 @@ def validate(doc) -> list[str]:
         if not isinstance(env.get(key), str):
             errors.append(f"env.{key}: want string, got {env.get(key)!r}")
     if not (isinstance(env.get("n_devices"), int) and env["n_devices"] >= 1):
-        errors.append(f"env.n_devices: want int >= 1, "
+        errors.append("env.n_devices: want int >= 1, "
                       f"got {env.get('n_devices')!r}")
 
     stages = doc["model"].get("stages", {})
@@ -98,6 +139,31 @@ def validate(doc) -> list[str]:
             errors.append(f"model.stages missing {stage!r}")
         else:
             _check_stage(stages[stage], f"model.stages.{stage}", errors)
+
+    scaling = doc["scaling"]
+    for key in ("banks", "rank_strong", "rank_weak"):
+        if not isinstance(scaling.get(key), list):
+            errors.append(f"scaling.{key}: want a list of rows")
+    if isinstance(scaling.get("rank_weak"), list):
+        weak = scaling["rank_weak"]
+        if weak:
+            # row shape is always checked; the monotone invariant only on
+            # artifacts that claim it.  weak_gated=false records a measured
+            # machine property — an oversubscribed simulated host (more
+            # banks than physical cores) cannot sustain rank weak-scaling,
+            # and compare() flags losing the claim on the same environment.
+            shape_only: list[str] = []
+            _check_weak_scaling(weak, "scaling.rank_weak", shape_only,
+                                tol=float("inf"))
+            errors.extend(shape_only)
+            if not shape_only and scaling.get("weak_gated", True):
+                _check_weak_scaling(weak, "scaling.rank_weak", errors)
+        elif doc["settings"].get("banks", 0) >= 2:
+            # keyed on the same quantity the producer keys on: rank rows
+            # exist whenever the session grid had >= 2 banks
+            errors.append("scaling.rank_weak: empty, but the artifact was "
+                          "produced on >= 2 banks — rank scaling rows "
+                          "are required there")
 
     if not doc["workloads"]:
         errors.append("workloads: must be non-empty")
@@ -115,7 +181,7 @@ def validate(doc) -> list[str]:
         if not w["pipelineable"]:
             if not w.get("reason"):
                 errors.append(f"{where}: serialized-only entries must carry "
-                              f"the registry's reason")
+                              "the registry's reason")
             continue
         _check_run(w.get("fixed"), f"{where}.fixed", errors)
         _check_run(w.get("tuned"), f"{where}.tuned", errors, tuned=True)
@@ -129,7 +195,7 @@ def validate(doc) -> list[str]:
                 f"{where}: tuned overlap_speedup "
                 f"{tuned['overlap_speedup']:.3f} < fixed "
                 f"{fixed['overlap_speedup']:.3f} — the tuned plan must beat "
-                f"or tie the fixed-chunk baseline")
+                "or tie the fixed-chunk baseline")
     return errors
 
 
@@ -155,7 +221,7 @@ def compare(base: dict, cur: dict, threshold: float = DEFAULT_THRESHOLD,
         notes.append(
             f"environments differ ({env_fingerprint(base)} vs "
             f"{env_fingerprint(cur)}): gating structure/invariants only; "
-            f"pass --force-ratio to gate speedup ratios anyway")
+            "pass --force-ratio to gate speedup ratios anyway")
 
     def ratio_gate(name: str, metric: str, b: float, c: float) -> None:
         if gate_ratios and c < b * (1.0 - threshold):
@@ -169,6 +235,24 @@ def compare(base: dict, cur: dict, threshold: float = DEFAULT_THRESHOLD,
                 f"{name}: {metric} regressed {b:.4f}s -> {c:.4f}s "
                 f"(> {threshold:.0%} slower)")
 
+    # losing the weak-scaling property on the SAME environment is a
+    # regression of the rank-parallel path; on a different environment it
+    # is (like all numeric gates) only a note — the property is machine-
+    # dependent (see validate()).
+    base_gated = (base["scaling"].get("weak_gated", True)
+                  and bool(base["scaling"].get("rank_weak")))
+    cur_gated = cur["scaling"].get("weak_gated", True)
+    if base_gated and not cur_gated:
+        if gate_ratios:
+            errors.append(
+                "scaling.weak_gated: the baseline sustained the monotone "
+                "weak-scaling invariant on this environment, the current "
+                "run lost it — the rank-parallel path stopped scaling")
+        elif notes is not None:
+            notes.append("current artifact did not sustain the "
+                         "weak-scaling invariant (different environment: "
+                         "not gated)")
+
     for name, bw in base["workloads"].items():
         cw = cur["workloads"].get(name)
         if cw is None:
@@ -176,7 +260,7 @@ def compare(base: dict, cur: dict, threshold: float = DEFAULT_THRESHOLD,
             continue
         if bw["pipelineable"] and not cw["pipelineable"]:
             errors.append(f"{name}: was pipelineable in baseline, now "
-                          f"serialized-only")
+                          "serialized-only")
             continue
         time_gate(name, "serialized_s", bw["serialized_s"],
                   cw["serialized_s"])

@@ -59,7 +59,7 @@ def scan_sources() -> None:
                 doc = f"{m.group(1)}.md"
                 if not (ROOT / doc).exists():
                     errors.append(f"{rel}: mentions {doc}, "
-                                  f"which does not exist")
+                                  "which does not exist")
                     continue
                 for sec in TOKEN.findall(m.group(2) or ""):
                     check_ref(doc, sec, str(rel))

@@ -1,0 +1,63 @@
+#!/usr/bin/env python
+"""Render a pytest junit XML report as a GitHub job-summary markdown table.
+
+CI's tier-1 matrix jobs run ``pytest --junitxml=junit.xml`` and pipe this
+through to ``$GITHUB_STEP_SUMMARY`` so pass/fail counts (and the names of
+any failures) are readable per matrix leg without log-diving.
+
+    python tools/junit_summary.py junit.xml >> "$GITHUB_STEP_SUMMARY"
+"""
+
+from __future__ import annotations
+
+import sys
+import xml.etree.ElementTree as ET
+
+
+def summarize(path: str, label: str = "") -> str:
+    root = ET.parse(path).getroot()
+    suites = root.iter("testsuite") if root.tag == "testsuites" else [root]
+    total = failures = errors = skipped = 0
+    time_s = 0.0
+    failed: list[str] = []
+    for suite in suites:
+        total += int(suite.get("tests", 0))
+        failures += int(suite.get("failures", 0))
+        errors += int(suite.get("errors", 0))
+        skipped += int(suite.get("skipped", 0))
+        time_s += float(suite.get("time", 0.0))
+        for case in suite.iter("testcase"):
+            bad = case.find("failure") is not None
+            bad = bad or case.find("error") is not None
+            if bad:
+                failed.append(f"{case.get('classname')}::{case.get('name')}")
+    passed = total - failures - errors - skipped
+    status = "PASS" if not failures and not errors else "FAIL"
+    title = f"### {status}: tier-1 tests" + (f" — {label}" if label else "")
+    lines = [
+        title,
+        "",
+        "| total | passed | failed | errors | skipped | time |",
+        "|---|---|---|---|---|---|",
+        f"| {total} | {passed} | {failures} | {errors} | {skipped} "
+        f"| {time_s:.1f}s |",
+    ]
+    if failed:
+        lines += ["", "**Failing tests:**", ""]
+        lines += [f"- `{name}`" for name in failed[:50]]
+        if len(failed) > 50:
+            lines.append(f"- … and {len(failed) - 50} more")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv:
+        print("usage: junit_summary.py junit.xml [label]", file=sys.stderr)
+        return 2
+    print(summarize(argv[0], argv[1] if len(argv) > 1 else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
