@@ -51,7 +51,7 @@ def _sched_run(grid, entry, args_list, *, n_chunks, plan=None,
     warm = sess.submit(entry.name, *args_list[0])
     sess.drain()
     warm.result()
-    sess.telemetry.records.clear()
+    sess.telemetry.reset()    # drop warm-up from records AND running stats
 
     t0 = time.perf_counter()
     reqs = [sess.submit(entry.name, *args) for args in args_list]

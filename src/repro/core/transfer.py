@@ -27,6 +27,30 @@ from jax.sharding import PartitionSpec as P
 
 from .banked import BankGrid, RankGrid
 
+_get_tracer = None
+
+
+def _tracer():
+    """The active span tracer (DESIGN.md §11) — bound lazily because
+    ``repro.runtime`` imports this module at package-init time (importing
+    ``repro.runtime.trace`` at the top here would be circular).  After the
+    first call this is one global read + one function call."""
+    global _get_tracer
+    if _get_tracer is None:
+        from repro.runtime.trace import get_tracer
+        _get_tracer = get_tracer
+    return _get_tracer()
+
+
+def _trace_xfer(rec: "TransferRecord", t0: float) -> "TransferRecord":
+    """Emit a span mirroring a TransferRecord (no-op when tracing is off);
+    returns the record so call sites stay one-liners."""
+    tr = _tracer()
+    if tr.enabled:
+        tr.emit(rec.kind, "transfer", t0, t0 + rec.seconds,
+                bytes=rec.nbytes)
+    return rec
+
 
 @dataclasses.dataclass
 class TransferRecord:
@@ -121,8 +145,9 @@ def push_parallel(grid: BankGrid, x, spec: P | None = None):
     t0 = time.perf_counter()
     out = grid.to_banks(x, spec)
     jax.block_until_ready(out)
-    return out, TransferRecord("cpu_dpu_parallel", _nbytes(np.asarray(x)),
-                               time.perf_counter() - t0)
+    return out, _trace_xfer(TransferRecord(
+        "cpu_dpu_parallel", _nbytes(np.asarray(x)),
+        time.perf_counter() - t0), t0)
 
 
 def push_serial(grid: BankGrid, chunks: Sequence[np.ndarray]):
@@ -130,23 +155,24 @@ def push_serial(grid: BankGrid, chunks: Sequence[np.ndarray]):
     out = grid.serial_to_banks(chunks)
     jax.block_until_ready(out)
     nbytes = sum(_nbytes(c) for c in chunks)
-    return out, TransferRecord("cpu_dpu_serial", nbytes,
-                               time.perf_counter() - t0)
+    return out, _trace_xfer(TransferRecord(
+        "cpu_dpu_serial", nbytes, time.perf_counter() - t0), t0)
 
 
 def push_broadcast(grid: BankGrid, x):
     t0 = time.perf_counter()
     out = grid.broadcast(x)
     jax.block_until_ready(out)
-    return out, TransferRecord("cpu_dpu_broadcast", _nbytes(np.asarray(x)),
-                               time.perf_counter() - t0)
+    return out, _trace_xfer(TransferRecord(
+        "cpu_dpu_broadcast", _nbytes(np.asarray(x)),
+        time.perf_counter() - t0), t0)
 
 
 def pull_parallel(grid: BankGrid, x):
     t0 = time.perf_counter()
     host = grid.from_banks(x)
-    return host, TransferRecord("dpu_cpu_parallel", _nbytes(host),
-                                time.perf_counter() - t0)
+    return host, _trace_xfer(TransferRecord(
+        "dpu_cpu_parallel", _nbytes(host), time.perf_counter() - t0), t0)
 
 
 # -- async variants (double-buffering building blocks) -----------------------
@@ -162,8 +188,9 @@ def push_parallel_async(grid: BankGrid, x, spec: P | None = None):
     """Parallel CPU→bank scatter without the completion barrier."""
     t0 = time.perf_counter()
     out = grid.to_banks(x, spec)
-    return out, TransferRecord("cpu_dpu_async", _nbytes(np.asarray(x)),
-                               time.perf_counter() - t0)
+    return out, _trace_xfer(TransferRecord(
+        "cpu_dpu_async", _nbytes(np.asarray(x)),
+        time.perf_counter() - t0), t0)
 
 
 def pull_async(x):
@@ -178,8 +205,8 @@ def pull_async(x):
     def resolve():
         t0 = time.perf_counter()
         host = np.asarray(jax.device_get(x))
-        return host, TransferRecord("dpu_cpu_async", _nbytes(host),
-                                    time.perf_counter() - t0)
+        return host, _trace_xfer(TransferRecord(
+            "dpu_cpu_async", _nbytes(host), time.perf_counter() - t0), t0)
     return resolve
 
 
@@ -187,8 +214,8 @@ def pull_serial(grid: BankGrid, xs: Sequence):
     t0 = time.perf_counter()
     host = [np.asarray(jax.device_get(x)) for x in xs]
     nbytes = sum(_nbytes(h) for h in host)
-    return host, TransferRecord("dpu_cpu_serial", nbytes,
-                                time.perf_counter() - t0)
+    return host, _trace_xfer(TransferRecord(
+        "dpu_cpu_serial", nbytes, time.perf_counter() - t0), t0)
 
 
 # -- rank-parallel transfers (DESIGN.md §10) ---------------------------------
@@ -210,8 +237,8 @@ def push_ranks_async(grid: RankGrid, per_rank: Sequence, spec: P | None = None):
     outs = [grid.rank_view(r).to_banks(x, spec)
             for r, x in enumerate(per_rank)]
     nbytes = sum(_nbytes(np.asarray(x)) for x in per_rank)
-    return outs, TransferRecord("cpu_dpu_rank_async", nbytes,
-                                time.perf_counter() - t0)
+    return outs, _trace_xfer(TransferRecord(
+        "cpu_dpu_rank_async", nbytes, time.perf_counter() - t0), t0)
 
 
 def pull_ranks_async(xs: Sequence):
@@ -228,6 +255,6 @@ def pull_ranks_async(xs: Sequence):
         t0 = time.perf_counter()
         host = [np.asarray(jax.device_get(x)) for x in xs]
         nbytes = sum(_nbytes(h) for h in host)
-        return host, TransferRecord("dpu_cpu_rank_async", nbytes,
-                                    time.perf_counter() - t0)
+        return host, _trace_xfer(TransferRecord(
+            "dpu_cpu_rank_async", nbytes, time.perf_counter() - t0), t0)
     return resolve

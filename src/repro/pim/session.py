@@ -36,6 +36,7 @@ is too coarse.
 """
 from __future__ import annotations
 
+import os
 from typing import TYPE_CHECKING, Any, Iterable, Mapping, Sequence
 
 import numpy as np
@@ -45,6 +46,7 @@ from repro.runtime.autotune import DEFAULT_N_CHUNKS, TuningResult
 from repro.runtime.pipeline import run_pipelined_ranked
 from repro.runtime.scheduler import PimRequest, PimScheduler
 from repro.runtime.telemetry import Telemetry
+from repro.runtime.trace import NULL_SPAN, Tracer, set_tracer
 
 if TYPE_CHECKING:  # annotation-only: importing repro.prim pulls the suite
     from repro.prim.registry import WorkloadEntry
@@ -101,7 +103,8 @@ class PimSession:
                  n_chunks: int = DEFAULT_N_CHUNKS,
                  max_batch_requests: int = 8,
                  max_batch_bytes: int = 256 << 20,
-                 telemetry: Telemetry | None = None):
+                 telemetry: Telemetry | None = None,
+                 trace: bool | str | None = None):
         if grid is not None and (banks is not None or ranks is not None
                                  or banks_per_rank is not None):
             raise ValueError("pass either grid= or a banks/ranks shape, "
@@ -131,6 +134,17 @@ class PimSession:
             max_batch_requests=max_batch_requests,
             max_batch_bytes=max_batch_bytes, plans=plans,
             telemetry=telemetry)
+        # tracing (DESIGN.md §11): off by default; ``trace=True`` records
+        # spans for explicit trace_export(), a path (or the REPRO_TRACE env
+        # var when trace is None) also auto-exports at close().  The session
+        # tracer is installed as the process-wide active tracer and the
+        # previous one restored at close() — last-opened session wins.
+        if trace is None:
+            trace = os.environ.get("REPRO_TRACE") or False
+        self._trace_path = trace if isinstance(trace, str) else None
+        self._tracer: Tracer | None = Tracer() if trace else None
+        self._prev_tracer = (set_tracer(self._tracer)
+                             if self._tracer is not None else None)
         self._closed = False
         self._serving = False
         # an empty options mapping still means "autotune with defaults"
@@ -189,9 +203,43 @@ class PimSession:
     def closed(self) -> bool:
         return self._closed
 
+    @property
+    def tracer(self) -> Tracer | None:
+        """This session's span tracer (None when tracing is off) —
+        DESIGN.md §11.  Enable with ``trace=True`` / ``trace="out.json"`` or
+        the ``REPRO_TRACE=path`` env var."""
+        return self._tracer
+
+    def trace_export(self, path: str | None = None) -> str:
+        """Write the recorded spans as a Chrome/Perfetto ``trace_event``
+        JSON file (load it at ui.perfetto.dev or chrome://tracing).
+        ``path`` defaults to the configured trace path (``trace="..."`` or
+        ``REPRO_TRACE``); returns the path written."""
+        if self._tracer is None:
+            raise RuntimeError("trace_export() on an untraced session — "
+                               "open it with trace=True / trace=path or set "
+                               "REPRO_TRACE")
+        path = path or self._trace_path
+        if not path:
+            raise ValueError("no export path: pass trace_export(path) or "
+                             "open the session with trace='out.json'")
+        self._tracer.export(path)
+        return path
+
     def stats(self) -> dict:
-        """Aggregate telemetry (requests/sec, mean latency, GB/s moved)."""
-        return self.telemetry.aggregate()
+        """Aggregate telemetry + live metrics (DESIGN.md §11): requests/sec,
+        mean/min/max latency, p50/p90/p99 percentiles, per-stage seconds,
+        per-workload breakdown, raw counters, and — when tracing — span
+        counts."""
+        out = self.telemetry.aggregate()
+        snap = self.telemetry.metrics.snapshot()
+        out["counters"] = snap["counters"]
+        if "queue_depth" in snap["histograms"]:
+            out["queue_depth"] = snap["histograms"]["queue_depth"]
+        if self._tracer is not None:
+            out["trace"] = {"spans": len(self._tracer.spans),
+                            "dropped_spans": self._tracer.dropped}
+        return out
 
     def pending(self) -> int:
         return self._sched.pending()
@@ -240,11 +288,15 @@ class PimSession:
         serialized-only execution is picked per registry entry; a tuned plan
         overrides the chunk count when installed."""
         self._check_open("run")
-        req = self._sched.submit(workload, *args, priority=priority)
-        if self._serving:
-            return req.result(timeout=timeout)
-        self._sched.drain()
-        return req.result(timeout=0)
+        tr = self._tracer
+        with (tr.span(f"run:{workload}", "session", track="session",
+                      workload=workload) if tr is not None
+              else NULL_SPAN):
+            req = self._sched.submit(workload, *args, priority=priority)
+            if self._serving:
+                return req.result(timeout=timeout)
+            self._sched.drain()
+            return req.result(timeout=0)
 
     def map(self, workload: str, arg_stream: Iterable[tuple]) -> list:
         """Streamed batch: run many same-workload invocations back-to-back.
@@ -260,6 +312,13 @@ class PimSession:
         args_list = [tuple(a) for a in arg_stream]
         if not args_list:
             return []
+        tr = self._tracer
+        with (tr.span(f"map:{workload}", "session", track="session",
+                      workload=workload, requests=len(args_list))
+              if tr is not None else NULL_SPAN):
+            return self._map(workload, args_list)
+
+    def _map(self, workload: str, args_list: list) -> list:
         if self._serving or workload not in self._sched.workloads:
             # serving (worker thread owns dispatch) or serialized-only /
             # unknown: the scheduler path handles all three
@@ -325,6 +384,10 @@ class PimSession:
             self._serving = False
         elif self._sched.pending():
             self._sched.drain()      # no future may be left dangling
+        if self._tracer is not None:
+            if self._trace_path:
+                self._tracer.export(self._trace_path)
+            set_tracer(self._prev_tracer)   # restore whoever was active
         self._closed = True
 
     def __enter__(self) -> "PimSession":

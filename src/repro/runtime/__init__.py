@@ -18,14 +18,18 @@ import warnings
 from .autotune import (StageFit, TunedPlan, TuningResult, WorkloadProfile,
                        autotune, calibrate, plan_for, probe_plan,
                        probe_ranks, rank_candidates)
+from .metrics import Histogram, Metrics, merge_snapshots
 from .pipeline import (PipelineResult, run_pipelined, run_pipelined_many,
                        run_pipelined_ranked)
 from .scheduler import PimRequest, PimScheduler
 from .telemetry import RequestRecord, Telemetry
+from .trace import NULL_TRACER, Span, Tracer, get_tracer, set_tracer
 
 __all__ = ["PipelineResult", "run_pipelined", "run_pipelined_many",
            "run_pipelined_ranked",
            "PimRequest", "PimScheduler", "RequestRecord", "Telemetry",
+           "Histogram", "Metrics", "merge_snapshots",
+           "NULL_TRACER", "Span", "Tracer", "get_tracer", "set_tracer",
            "StageFit", "TunedPlan", "TuningResult", "WorkloadProfile",
            "autotune", "calibrate", "plan_for", "probe_plan",
            "probe_ranks", "rank_candidates"]

@@ -38,8 +38,10 @@ from typing import TYPE_CHECKING, Any, Sequence
 import jax
 
 from repro.core.banked import BankGrid
+from repro.core.transfer import tree_nbytes
 
 from .telemetry import RequestRecord, _phases
+from .trace import get_tracer
 
 if TYPE_CHECKING:  # annotation-only: importing repro.prim pulls the suite
     from repro.prim.common import ChunkedWorkload, PhaseTimes
@@ -112,52 +114,73 @@ def run_pipelined_many(grid: BankGrid, workload: ChunkedWorkload,
                 rec.predicted_overlap = plan.predicted_overlap
     n_req = len(requests)
     metas: list = [None] * n_req
-    flat: list = []                       # (req_idx, chunk)
+    flat: list = []                       # (req_idx, chunk_idx, chunk)
     bucket = [_Buckets() for _ in range(n_req)]
     t_start = [0.0] * n_req
     t_done = [0.0] * n_req
     parts: list = [[] for _ in range(n_req)]
     chunk_count = [0] * n_req
     results: list = [None] * n_req
+    tr = get_tracer()                     # off-by-default span tracer
+    chunk_bytes: dict = {}                # per-request span tag cache: chunks
+                                          # are equal-shaped, size them once
+
+    def _rid(i):
+        return records[i].request_id if records is not None else i
 
     t0 = time.perf_counter()
     for i, args in enumerate(requests):
         metas[i], chunks = workload.split(grid, n_chunks, *args)
         chunk_count[i] = len(chunks)
-        flat.extend((i, c) for c in chunks)
+        flat.extend((i, ci, c) for ci, c in enumerate(chunks))
         if records is not None:
             records[i].n_chunks = len(chunks)
 
     def scatter(k):
-        i, chunk = flat[k]
+        i, ci, chunk = flat[k]
         if not t_start[i]:
             t_start[i] = time.perf_counter()
         ts = time.perf_counter()
         bufs = workload.scatter(grid, metas[i], chunk)
-        bucket[i].add("cpu_dpu", ts)
+        t1 = bucket[i].add("cpu_dpu", ts)
+        if tr.enabled:
+            if (nb := chunk_bytes.get(i)) is None:
+                nb = chunk_bytes[i] = tree_nbytes(chunk)
+            tr.emit("scatter", "cpu_dpu", ts, t1, workload=workload.name,
+                    req=_rid(i), chunk=ci, bytes=nb)
         return bufs
 
     def retire(entry):
         """Block for one in-flight chunk and fold it into its request."""
-        i, outs = entry
+        i, ci, outs = entry
         ts = time.perf_counter()
         parts[i].append(workload.retrieve(grid, metas[i], outs))
-        ts = bucket[i].add("dpu_cpu", ts)
+        t1 = bucket[i].add("dpu_cpu", ts)
+        if tr.enabled:
+            tr.emit("retrieve", "dpu_cpu", ts, t1, workload=workload.name,
+                    req=_rid(i), chunk=ci)
         if len(parts[i]) == chunk_count[i]:
             results[i] = workload.merge(grid, metas[i], parts[i])
-            t_done[i] = bucket[i].add("inter_dpu", ts)
+            t_done[i] = bucket[i].add("inter_dpu", t1)
+            if tr.enabled:
+                tr.emit("merge", "inter_dpu", t1, t_done[i],
+                        workload=workload.name, req=_rid(i),
+                        chunks=chunk_count[i])
 
     in_flight: list = []
     bufs = scatter(0) if flat else None
     for k in range(len(flat)):
-        i, _ = flat[k]
+        i, ci, _ = flat[k]
         ts = time.perf_counter()
         outs = workload.compute(grid, metas[i], bufs)
-        bucket[i].add("dpu", ts)
+        t1 = bucket[i].add("dpu", ts)
+        if tr.enabled:
+            tr.emit("compute", "dpu", ts, t1, workload=workload.name,
+                    req=_rid(i), chunk=ci)
         if k + 1 < len(flat):
             bufs = scatter(k + 1)        # overlaps compute of chunk k
         _host_prefetch(outs)             # start draining chunk k early
-        in_flight.append((i, outs))
+        in_flight.append((i, ci, outs))
         if len(in_flight) > 1:           # retire k-1 while k computes
             retire(in_flight.pop(0))
     while in_flight:
@@ -177,6 +200,11 @@ def run_pipelined_many(grid: BankGrid, workload: ChunkedWorkload,
 # ---------------------------------------------------------------------------
 # rank-parallel pipelines (DESIGN.md §10)
 # ---------------------------------------------------------------------------
+
+def _req_id(records, i: int) -> int:
+    """Span tag: the request's telemetry id when records ride along, else
+    its batch-local index."""
+    return records[i].request_id if records is not None else i
 
 def _resolve_ranks(grid, n_ranks, plan) -> int:
     """Effective rank count: the plan's measured pick (a probed plan is
@@ -202,18 +230,27 @@ def _rank_worker(view, workload, metas, stream, bucket, t_start, t_retired):
     ``t_retired[i]`` with the wall time this rank retired request i's last
     chunk.  Same three-stage loop as :func:`run_pipelined_many`, minus the
     merge — parts go back to the caller, which merges across ranks in
-    global chunk order."""
+    global chunk order.  Spans land on this rank's own track: the caller
+    sets the tracer's thread-local track override to ``rank-r``
+    (DESIGN.md §11), so a traced run shows one pipeline lane per rank."""
     parts: dict[int, list] = {}
     if not stream:
         return parts
+    tr = get_tracer()
+    chunk_bytes: dict = {}                # per-request cache (equal-shaped)
 
     def scatter(k):
-        i, _, chunk = stream[k]
+        i, gidx, chunk = stream[k]
         if not t_start[i]:
             t_start[i] = time.perf_counter()
         ts = time.perf_counter()
         bufs = workload.scatter(view, metas[i], chunk)
-        bucket[i].add("cpu_dpu", ts)
+        t1 = bucket[i].add("cpu_dpu", ts)
+        if tr.enabled:
+            if (nb := chunk_bytes.get(i)) is None:
+                nb = chunk_bytes[i] = tree_nbytes(chunk)
+            tr.emit("scatter", "cpu_dpu", ts, t1, workload=workload.name,
+                    req=i, chunk=gidx, bytes=nb)
         return bufs
 
     def retire(entry):
@@ -222,6 +259,9 @@ def _rank_worker(view, workload, metas, stream, bucket, t_start, t_retired):
         parts.setdefault(i, []).append(
             (gidx, workload.retrieve(view, metas[i], outs)))
         t_retired[i] = bucket[i].add("dpu_cpu", ts)
+        if tr.enabled:
+            tr.emit("retrieve", "dpu_cpu", ts, t_retired[i],
+                    workload=workload.name, req=i, chunk=gidx)
 
     in_flight: list = []
     bufs = scatter(0)
@@ -229,7 +269,10 @@ def _rank_worker(view, workload, metas, stream, bucket, t_start, t_retired):
         i, gidx = stream[k][0], stream[k][1]
         ts = time.perf_counter()
         outs = workload.compute(view, metas[i], bufs)
-        bucket[i].add("dpu", ts)
+        t1 = bucket[i].add("dpu", ts)
+        if tr.enabled:
+            tr.emit("compute", "dpu", ts, t1, workload=workload.name,
+                    req=i, chunk=gidx)
         if k + 1 < len(stream):
             bufs = scatter(k + 1)        # overlaps compute of chunk k
         _host_prefetch(outs)
@@ -306,11 +349,16 @@ def run_pipelined_ranked(grid, workload: ChunkedWorkload,
     rank_parts: list = [None] * n_ranks
     errors: list = [None] * n_ranks
 
+    tr = get_tracer()
+
     def worker(r):
         try:
-            rank_parts[r] = _rank_worker(grid.rank_view(r), workload,
-                                         metas[r], streams[r], bucket[r],
-                                         t_first[r], t_retired[r])
+            # one trace track per rank pipeline (rank 0 runs on the caller's
+            # thread, so the thread name alone cannot identify its track)
+            with tr.track(f"rank-{r}"):
+                rank_parts[r] = _rank_worker(grid.rank_view(r), workload,
+                                             metas[r], streams[r], bucket[r],
+                                             t_first[r], t_retired[r])
         except BaseException as e:           # noqa: BLE001 — re-raised below
             errors[r] = e
 
@@ -332,7 +380,12 @@ def run_pipelined_ranked(grid, workload: ChunkedWorkload,
         parts = sorted(p for ps in rank_parts for p in ps.get(i, ()))
         ts = time.perf_counter()
         results[i] = workload.merge(rep, metas[0][i], [p for _, p in parts])
-        merge_dt = time.perf_counter() - ts
+        t_merged = time.perf_counter()
+        merge_dt = t_merged - ts
+        if tr.enabled:
+            tr.emit("merge", "inter_dpu", ts, t_merged, track="host",
+                    workload=workload.name, req=_req_id(records, i),
+                    ranks=n_ranks)
         times = _phases()
         for r in range(n_ranks):                 # host-observed, summed over
             for k in dataclasses.fields(times):  # the rank threads

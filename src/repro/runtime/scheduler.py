@@ -52,6 +52,7 @@ from repro.core.transfer import tree_nbytes as _nbytes
 
 from .pipeline import run_pipelined_ranked
 from .telemetry import RequestRecord, Telemetry, now
+from .trace import get_tracer
 
 if TYPE_CHECKING:  # annotation-only: importing repro.prim pulls the suite
     from repro.prim import common
@@ -154,7 +155,8 @@ class PimScheduler:
         ``submit()`` here and the session façade's streamed ``map()``."""
         return RequestRecord(request_id=next(self._seq), workload=workload,
                              n_items=_nitems(args), bytes_in=_nbytes(args),
-                             priority=priority, t_submit=now())
+                             priority=priority, t_submit=now(),
+                             n_banks=self.grid.n_banks)
 
     def submit(self, workload: str, *args, priority: int = 0) -> PimRequest:
         """Enqueue one workload invocation; returns a waitable handle."""
@@ -165,7 +167,11 @@ class PimScheduler:
         req = PimRequest(workload, args, priority, rec)
         with self._cv:
             heapq.heappush(self._queue, (-rec.priority, rec.request_id, req))
+            depth = len(self._queue)
             self._cv.notify()
+        m = self.telemetry.metrics            # live counters (DESIGN.md §11)
+        m.inc("submitted")
+        m.observe("queue_depth", depth, bounds=range(1, 257))
         return req
 
     def pending(self) -> int:
@@ -179,6 +185,8 @@ class PimScheduler:
         that fit the batch limits.  Coalescing stops at the first entry that
         doesn't match or fit — skipping past it would execute a lower-ranked
         request ahead of it, violating the priority/FIFO guarantee."""
+        tr = get_tracer()
+        t0 = now() if tr.enabled else 0.0
         order = sorted(self._queue)            # priority/FIFO order
         head = order[0][2]
         plan = self.plans.get(head.workload)
@@ -195,6 +203,10 @@ class PimScheduler:
             nbytes += req.record.bytes_in
         self._queue = order[len(batch):]
         heapq.heapify(self._queue)
+        if tr.enabled:
+            tr.emit("batch_form", "sched", t0, now(), track="scheduler",
+                    workload=head.workload, requests=len(batch),
+                    bytes=nbytes, queued=len(self._queue))
         return batch
 
     # -- execution ------------------------------------------------------------
@@ -204,6 +216,7 @@ class PimScheduler:
         ``pim()`` back-to-back — no chunk overlap exists to exploit — but
         keep the full request lifecycle (priority, telemetry, batching)."""
         fn = self.serialized[batch[0].workload]
+        tr = get_tracer()
         for req in batch:
             rec = req.record
             rec.batch_id = bid
@@ -214,6 +227,10 @@ class PimScheduler:
                 req._fulfill(error=e)
                 continue
             rec.t_finish = now()
+            if tr.enabled:
+                tr.emit("serialized", "dpu", rec.t_start, rec.t_finish,
+                        track="host", workload=rec.workload,
+                        req=rec.request_id)
             rec.phases = times
             rec.bytes_out = (result.nbytes
                              if isinstance(result, np.ndarray) else 0)
@@ -222,6 +239,15 @@ class PimScheduler:
 
     def _run_batch(self, batch: Sequence[PimRequest]) -> None:
         bid = next(self._batch_seq)
+        tr = get_tracer()
+        if tr.enabled:
+            # queue wait became service: emit the wait interval per request
+            # on the scheduler track (submit -> now, i.e. batch start)
+            t_now = now()
+            for req in batch:
+                tr.emit("queue_wait", "queue", req.record.t_submit, t_now,
+                        track="scheduler", req=req.record.request_id,
+                        workload=req.workload, batch=bid)
         if batch[0].workload in self.serialized:
             self._run_serialized(batch, bid)
             return
@@ -254,10 +280,15 @@ class PimScheduler:
     def drain(self) -> int:
         """Process queued requests in the calling thread until empty.
         Returns the number of requests completed."""
+        tr = get_tracer()
+        t0 = now() if tr.enabled else 0.0
         done = 0
         while True:
             with self._cv:
                 if not self._queue:
+                    if tr.enabled and done:
+                        tr.emit("drain", "sched", t0, now(),
+                                track="scheduler", requests=done)
                     return done
                 batch = self._pop_batch()
             self._run_batch(batch)

@@ -11,11 +11,31 @@ issuing scatters, ``dpu`` time spent dispatching/awaiting bank-local compute,
 ``dpu_cpu`` time blocked in retrieves, ``inter_dpu`` host-side merge time.
 The buckets sum to roughly the makespan; hidden (overlapped) device time by
 construction does not appear — that is the point.
+
+Serving-hardened (DESIGN.md §11): completed records land in a **bounded
+ring buffer** (``max_records``, default 64k) so a long-running ``submit()``
+server cannot leak, while **running counters** keep every aggregate exact
+over the full lifetime — ``aggregate()`` never iterates the (possibly
+truncated) record window.  A lock guards the scheduler worker thread's
+``record()`` against concurrent ``stats()`` / ``rows()`` readers, and every
+record feeds the :class:`~repro.runtime.metrics.Metrics` registry
+(latency / queue-wait / service histograms, per-stage second counters) so
+``session.stats()`` can report p50/p90/p99 alongside the means.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 import time
+
+from .metrics import Metrics
+
+#: default ring-buffer capacity for completed request records; aggregates
+#: stay exact past the cap via the running counters
+DEFAULT_MAX_RECORDS = 1 << 16
+
+_STAGE_KEYS = ("cpu_dpu", "dpu", "inter_dpu", "dpu_cpu")
 
 
 def now() -> float:
@@ -43,6 +63,7 @@ class RequestRecord:
     priority: int = 0
     n_chunks: int = 1
     n_ranks: int = 1            # ranks the chunks were sharded across
+    n_banks: int = 0            # grid size at submit time (row() uses it)
     batch_id: int = -1
     t_submit: float = 0.0
     t_start: float = 0.0
@@ -87,9 +108,12 @@ class RequestRecord:
         moved = self.bytes_in + self.bytes_out
         return moved / self.service_s / 1e9 if self.service_s else 0.0
 
-    def row(self, n_banks: int) -> dict:
+    def row(self, n_banks: int | None = None) -> dict:
+        """One flat table row; ``n_banks`` defaults to the value stored at
+        record time (callers no longer need to thread the grid size)."""
         return {"request": self.request_id, "workload": self.workload,
-                "banks": n_banks, "items": self.n_items,
+                "banks": self.n_banks if n_banks is None else n_banks,
+                "items": self.n_items,
                 "priority": self.priority, "chunks": self.n_chunks,
                 "ranks": self.n_ranks, "batch": self.batch_id,
                 "queue_wait_s": self.queue_wait,
@@ -104,44 +128,161 @@ class RequestRecord:
                 "achieved_gbps": self.achieved_gbps}
 
 
-@dataclasses.dataclass
-class Telemetry:
-    """Aggregate sink the scheduler writes completed records into."""
+class _WorkloadStats:
+    """Running per-workload aggregate (one breakdown row each)."""
 
-    records: list = dataclasses.field(default_factory=list)
+    __slots__ = ("n", "sum_latency", "min_latency", "max_latency",
+                 "sum_service", "bytes_moved")
+
+    def __init__(self):
+        self.n = 0
+        self.sum_latency = 0.0
+        self.min_latency = float("inf")
+        self.max_latency = 0.0
+        self.sum_service = 0.0
+        self.bytes_moved = 0
+
+    def add(self, rec: RequestRecord) -> None:
+        lat = rec.latency_s
+        self.n += 1
+        self.sum_latency += lat
+        self.min_latency = min(self.min_latency, lat)
+        self.max_latency = max(self.max_latency, lat)
+        self.sum_service += rec.service_s
+        self.bytes_moved += rec.bytes_in + rec.bytes_out
+
+    def row(self) -> dict:
+        return {"requests": self.n,
+                "mean_latency_s": self.sum_latency / self.n,
+                "min_latency_s": self.min_latency,
+                "max_latency_s": self.max_latency,
+                "mean_service_s": self.sum_service / self.n,
+                "bytes_moved": self.bytes_moved}
+
+
+class Telemetry:
+    """Aggregate sink the scheduler writes completed records into.
+
+    ``records`` is the bounded recent window (ring buffer) for per-request
+    inspection; every aggregate comes from running counters updated under
+    the lock at ``record()`` time, so nothing drifts when old records are
+    evicted.  ``metrics`` is the live counters/histograms surface
+    (DESIGN.md §11)."""
+
+    def __init__(self, max_records: int = DEFAULT_MAX_RECORDS,
+                 metrics: Metrics | None = None):
+        self.max_records = max_records
+        self.records: collections.deque[RequestRecord] = collections.deque(
+            maxlen=max_records)
+        self.metrics = metrics if metrics is not None else Metrics()
+        self._lock = threading.Lock()
+        self._reset_running()
+
+    def _reset_running(self) -> None:
+        self._n = 0
+        self._tuned = 0
+        self._bytes_moved = 0
+        self._sum_queue_wait = 0.0
+        self._sum_latency = 0.0
+        self._min_latency = float("inf")
+        self._max_latency = 0.0
+        self._t_first_submit = float("inf")
+        self._t_last_finish = 0.0
+        self._sum_speedup = 0.0
+        self._n_speedup = 0
+        self._sum_mispred = 0.0
+        self._n_mispred = 0
+        self._stage_s = dict.fromkeys(_STAGE_KEYS, 0.0)
+        self._by_workload: dict[str, _WorkloadStats] = {}
 
     def record(self, rec: RequestRecord) -> None:
-        self.records.append(rec)
+        """Fold one completed record in (scheduler worker thread calls this
+        while readers snapshot — everything mutates under the lock)."""
+        lat = rec.latency_s
+        with self._lock:
+            self.records.append(rec)
+            self._n += 1
+            self._tuned += rec.tuned
+            self._bytes_moved += rec.bytes_in + rec.bytes_out
+            self._sum_queue_wait += rec.queue_wait
+            self._sum_latency += lat
+            self._min_latency = min(self._min_latency, lat)
+            self._max_latency = max(self._max_latency, lat)
+            self._t_first_submit = min(self._t_first_submit, rec.t_submit)
+            self._t_last_finish = max(self._t_last_finish, rec.t_finish)
+            if rec.overlap_speedup > 0:
+                self._sum_speedup += rec.overlap_speedup
+                self._n_speedup += 1
+            if rec.predicted_overlap and rec.overlap_speedup:
+                self._sum_mispred += rec.overlap_misprediction
+                self._n_mispred += 1
+            for key in _STAGE_KEYS:
+                self._stage_s[key] += getattr(rec.phases, key)
+            self._by_workload.setdefault(
+                rec.workload, _WorkloadStats()).add(rec)
+        m = self.metrics
+        m.inc("requests")
+        m.inc("bytes_moved", rec.bytes_in + rec.bytes_out)
+        m.observe("latency_s", lat)
+        m.observe("queue_wait_s", rec.queue_wait)
+        m.observe("service_s", rec.service_s)
+        for key in _STAGE_KEYS:
+            m.inc(f"{key}_s", getattr(rec.phases, key))
 
     def __len__(self) -> int:
-        return len(self.records)
+        return self._n
+
+    def reset(self) -> None:
+        """Drop the record window AND the running aggregates/metrics —
+        what benchmarks use between warmup and the measured run."""
+        with self._lock:
+            self.records.clear()
+            self._reset_running()
+        self.metrics.reset()
 
     def aggregate(self) -> dict:
-        if not self.records:
-            return {"requests": 0}
-        t0 = min(r.t_submit for r in self.records)
-        t1 = max(r.t_finish for r in self.records)
-        wall = max(t1 - t0, 1e-12)
-        n = len(self.records)
-        moved = sum(r.bytes_in + r.bytes_out for r in self.records)
-        speedups = [r.overlap_speedup for r in self.records
-                    if r.overlap_speedup > 0]
-        mispred = [r.overlap_misprediction for r in self.records
-                   if r.predicted_overlap and r.overlap_speedup]
-        return {
-            "requests": n,
-            "wall_s": wall,
-            "requests_per_s": n / wall,
-            "mean_queue_wait_s": sum(r.queue_wait for r in self.records) / n,
-            "mean_latency_s": sum(r.latency_s for r in self.records) / n,
-            "bytes_moved": moved,
-            "aggregate_gbps": moved / wall / 1e9,
-            "mean_overlap_speedup": (sum(speedups) / len(speedups)
-                                     if speedups else 0.0),
-            "tuned_requests": sum(r.tuned for r in self.records),
-            "mean_overlap_misprediction": (sum(mispred) / len(mispred)
-                                           if mispred else 0.0),
-        }
+        """Lifetime aggregates from the running counters (exact even after
+        the ring buffer evicted old records), including latency extremes,
+        p50/p90/p99 percentiles, per-stage second totals, and one breakdown
+        row per workload."""
+        with self._lock:
+            if not self._n:
+                return {"requests": 0}
+            n = self._n
+            wall = max(self._t_last_finish - self._t_first_submit, 1e-12)
+            out = {
+                "requests": n,
+                "wall_s": wall,
+                "requests_per_s": n / wall,
+                "mean_queue_wait_s": self._sum_queue_wait / n,
+                "mean_latency_s": self._sum_latency / n,
+                "min_latency_s": self._min_latency,
+                "max_latency_s": self._max_latency,
+                "bytes_moved": self._bytes_moved,
+                "aggregate_gbps": self._bytes_moved / wall / 1e9,
+                "mean_overlap_speedup": (self._sum_speedup / self._n_speedup
+                                         if self._n_speedup else 0.0),
+                "tuned_requests": self._tuned,
+                "mean_overlap_misprediction": (
+                    self._sum_mispred / self._n_mispred
+                    if self._n_mispred else 0.0),
+                "stage_seconds": {f"{k}_s": v
+                                  for k, v in self._stage_s.items()},
+                "workloads": {name: ws.row()
+                              for name, ws in self._by_workload.items()},
+            }
+        out["percentiles"] = {
+            name: pcts for name in ("latency_s", "queue_wait_s", "service_s")
+            if (pcts := self.metrics.percentiles(name))}
+        return out
 
-    def rows(self, n_banks: int, table: str = "runtime_requests") -> list:
-        return [{"table": table, **r.row(n_banks)} for r in self.records]
+    def snapshot_records(self) -> list[RequestRecord]:
+        """Consistent copy of the record window (readers iterate this, not
+        the live deque the worker thread is appending to)."""
+        with self._lock:
+            return list(self.records)
+
+    def rows(self, n_banks: int | None = None,
+             table: str = "runtime_requests") -> list:
+        return [{"table": table, **r.row(n_banks)}
+                for r in self.snapshot_records()]

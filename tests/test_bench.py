@@ -1,7 +1,7 @@
 """Bench artifact layer: tools/bench.py produces a schema-valid document
 that survives a JSON round trip, tools/check_bench.py validates schemas,
-the monotone weak-scaling invariant, and regressions, and the committed
-BENCH_PR5.json baseline is valid."""
+the monotone weak-scaling invariant, the tracing-overhead gate, and
+regressions, and the committed BENCH_PR6.json baseline is valid."""
 import json
 import pathlib
 import sys
@@ -51,6 +51,38 @@ def test_collect_contents(doc, bank_grid):
     assert scaling["banks"]                      # bank-axis phase breakdown
     if doc["env"]["n_devices"] >= 2:             # rank rows need >= 2 banks
         assert scaling["rank_strong"] and scaling["rank_weak"]
+    obs = doc["observability"]
+    assert obs["workload"] == "VA"               # first pipelineable name
+    assert obs["spans"] >= 1 and obs["dropped_spans"] == 0
+    # either bound passes the gate: <5% relative, or bounded span-emission
+    # cost (in-process smoke runs cannot resolve the ratio against noise)
+    assert (obs["overhead_frac"] < check_bench.OVERHEAD_GATE
+            or obs["emit_us_per_span"] < check_bench.PER_SPAN_GATE_US)
+    pcts = obs["stats"]["percentiles"]["latency_s"]
+    assert 0 < pcts["p50"] <= pcts["p90"] <= pcts["p99"]
+
+
+def test_validate_gates_tracing_overhead(doc):
+    bad = json.loads(json.dumps(doc))
+    bad["observability"]["overhead_frac"] = 0.30
+    bad["observability"]["emit_us_per_span"] = 100.0
+    errs = check_bench.validate(bad)
+    assert any("overhead" in e for e in errs)
+    # a bounded span-emission cost excuses a noise-starved relative
+    # measure, and vice versa — only failing both trips the gate
+    ok = json.loads(json.dumps(doc))
+    ok["observability"]["overhead_frac"] = 0.30
+    ok["observability"]["emit_us_per_span"] = 10.0
+    assert check_bench.validate(ok) == []
+    ok["observability"]["overhead_frac"] = 0.01
+    ok["observability"]["emit_us_per_span"] = 100.0
+    assert check_bench.validate(ok) == []
+    none = json.loads(json.dumps(doc))
+    none["observability"] = {"workload": None}   # nothing measurable: valid
+    assert check_bench.validate(none) == []
+    missing = json.loads(json.dumps(doc))
+    del missing["observability"]
+    assert any("observability" in e for e in check_bench.validate(missing))
 
 
 def test_compare_identical_passes(doc):
@@ -218,8 +250,8 @@ def test_check_bench_cli(doc, tmp_path):
 # -- the committed baseline CI gates against ----------------------------------
 
 def test_committed_baseline_is_valid():
-    path = ROOT / "BENCH_PR5.json"
-    assert path.exists(), "BENCH_PR5.json baseline missing from repo root"
+    path = ROOT / "BENCH_PR6.json"
+    assert path.exists(), "BENCH_PR6.json baseline missing from repo root"
     base = json.loads(path.read_text())
     assert check_bench.validate(base) == []
     # generated at the CI bench-smoke shape: 8 simulated banks, full registry

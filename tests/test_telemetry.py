@@ -1,0 +1,213 @@
+"""Telemetry ring buffer + metrics layer (DESIGN.md §11): the bounded
+record window keeps aggregates exact past eviction, ``record()`` is safe
+against concurrent readers, histogram percentiles are correct within the
+√2 bucket-ratio bound, and the live counters surface behaves."""
+import math
+import threading
+
+import pytest
+
+from repro.runtime.metrics import (DEFAULT_BOUNDS, Histogram, Metrics,
+                                   merge_snapshots)
+from repro.runtime.telemetry import RequestRecord, Telemetry
+
+
+def _rec(i, workload="VA", latency=0.010, queue=0.002, nbytes=1000,
+         n_banks=8):
+    """A completed record with exact, easy-to-sum timings."""
+    t_submit = float(i)
+    return RequestRecord(
+        request_id=i, workload=workload, n_items=1,
+        bytes_in=nbytes, bytes_out=nbytes, n_banks=n_banks,
+        t_submit=t_submit, t_start=t_submit + queue,
+        t_finish=t_submit + queue + latency)
+
+
+# -- ring buffer + running counters ------------------------------------------
+
+def test_ring_buffer_evicts_records_but_aggregates_stay_exact():
+    tel = Telemetry(max_records=4)
+    for i in range(10):
+        tel.record(_rec(i, latency=0.010))
+    assert len(tel) == 10                       # lifetime count, not window
+    assert len(tel.records) == 4                # bounded window
+    assert [r.request_id for r in tel.snapshot_records()] == [6, 7, 8, 9]
+    agg = tel.aggregate()
+    assert agg["requests"] == 10                # exact past eviction
+    assert agg["bytes_moved"] == 10 * 2000
+    assert agg["mean_latency_s"] == pytest.approx(0.012)   # queue + service
+    assert agg["workloads"]["VA"]["requests"] == 10
+
+
+def test_aggregate_min_max_and_per_workload_rows():
+    tel = Telemetry()
+    tel.record(_rec(0, "VA", latency=0.010))
+    tel.record(_rec(1, "VA", latency=0.030))
+    tel.record(_rec(2, "GEMV", latency=0.500, nbytes=5000))
+    agg = tel.aggregate()
+    assert agg["min_latency_s"] == pytest.approx(0.012)    # queue + service
+    assert agg["max_latency_s"] == pytest.approx(0.502)
+    va, gemv = agg["workloads"]["VA"], agg["workloads"]["GEMV"]
+    assert va["requests"] == 2 and gemv["requests"] == 1
+    assert va["min_latency_s"] == pytest.approx(0.012)
+    assert va["max_latency_s"] == pytest.approx(0.032)
+    assert gemv["bytes_moved"] == 10000
+    assert agg["stage_seconds"].keys() == \
+        {"cpu_dpu_s", "dpu_s", "inter_dpu_s", "dpu_cpu_s"}
+
+
+def test_aggregate_percentiles_present_and_ordered():
+    tel = Telemetry()
+    for i in range(100):
+        tel.record(_rec(i, latency=0.001 * (i + 1)))
+    pcts = tel.aggregate()["percentiles"]
+    for key in ("latency_s", "queue_wait_s", "service_s"):
+        p = pcts[key]
+        assert 0 < p["p50"] <= p["p90"] <= p["p99"]
+    lat = pcts["latency_s"]
+    # √2 buckets ⇒ ≤ ~41% relative error on the interpolated value
+    assert lat["p50"] == pytest.approx(0.050, rel=0.45)
+    assert lat["p99"] == pytest.approx(0.099, rel=0.45)
+
+
+def test_row_uses_stored_n_banks_and_explicit_override():
+    rec = _rec(3, n_banks=8)
+    assert rec.row()["banks"] == 8              # no argument needed anymore
+    assert rec.row(16)["banks"] == 16           # explicit still wins
+    assert rec.row()["latency_s"] == pytest.approx(0.012)
+
+
+def test_reset_clears_window_counters_and_metrics():
+    tel = Telemetry()
+    tel.record(_rec(0))
+    tel.reset()
+    assert len(tel) == 0 and not tel.records
+    assert tel.aggregate() == {"requests": 0}
+    assert tel.metrics.counter("requests") == 0.0
+
+
+def test_concurrent_record_and_aggregate_threads():
+    tel = Telemetry(max_records=64)
+    n_writers, per_writer = 4, 200
+    errors = []
+
+    def writer(base):
+        for i in range(per_writer):
+            tel.record(_rec(base + i))
+
+    def reader():
+        for _ in range(300):
+            agg = tel.aggregate()
+            rows = tel.rows()
+            if agg["requests"] and not (
+                    agg["min_latency_s"] <= agg["mean_latency_s"]
+                    <= agg["max_latency_s"] + 1e-12):
+                errors.append(agg)
+            if len(rows) > 64:
+                errors.append(len(rows))
+
+    threads = [threading.Thread(target=writer, args=(k * per_writer,))
+               for k in range(n_writers)] + [threading.Thread(target=reader)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(tel) == n_writers * per_writer
+    assert tel.aggregate()["requests"] == n_writers * per_writer
+    assert tel.metrics.counter("requests") == n_writers * per_writer
+
+
+# -- Histogram ----------------------------------------------------------------
+
+def test_histogram_percentiles_within_bucket_ratio():
+    h = Histogram()
+    values = [0.001 * (i + 1) for i in range(1000)]   # 1ms .. 1s uniform
+    for v in values:
+        h.observe(v)
+    assert h.count == 1000
+    assert h.mean == pytest.approx(sum(values) / 1000)
+    ratio = math.sqrt(2.0)                            # default spacing
+    for p in (50.0, 90.0, 99.0):
+        exact = values[int(p / 100.0 * 1000) - 1]
+        est = h.percentile(p)
+        assert exact / ratio <= est <= exact * ratio, (p, est, exact)
+
+
+def test_histogram_clamps_to_observed_min_max_and_single_value():
+    h = Histogram()
+    h.observe(0.5)
+    assert h.percentile(0.0) == 0.5 and h.percentile(100.0) == 0.5
+    assert h.snapshot()["p50"] == 0.5
+    h2 = Histogram()
+    for v in (0.2, 0.3, 0.4):
+        h2.observe(v)
+    assert h2.percentile(0.0) >= 0.2 and h2.percentile(100.0) <= 0.4
+    assert h2.vmin == 0.2 and h2.vmax == 0.4
+
+
+def test_histogram_overflow_bucket_and_empty():
+    h = Histogram(bounds=[1.0, 2.0])
+    h.observe(100.0)                                  # > last bound
+    assert h.counts[-1] == 1
+    assert h.percentile(50.0) == 100.0                # clamped to vmax
+    assert Histogram().percentile(50.0) == 0.0        # empty -> 0
+    assert Histogram().snapshot()["count"] == 0
+
+
+def test_histogram_invalid_bounds_and_percentile_raise():
+    with pytest.raises(ValueError):
+        Histogram(bounds=[])
+    with pytest.raises(ValueError):
+        Histogram(bounds=[2.0, 1.0])                  # unsorted
+    h = Histogram()
+    h.observe(1.0)
+    with pytest.raises(ValueError):
+        h.percentile(101.0)
+    with pytest.raises(ValueError):
+        h.percentile(-1.0)
+
+
+def test_default_bounds_cover_microseconds_to_minutes():
+    assert DEFAULT_BOUNDS[0] == pytest.approx(1e-7)
+    assert DEFAULT_BOUNDS[-1] >= 100.0
+    assert list(DEFAULT_BOUNDS) == sorted(DEFAULT_BOUNDS)
+
+
+# -- Metrics registry ---------------------------------------------------------
+
+def test_metrics_counters_histograms_snapshot_reset():
+    m = Metrics()
+    m.inc("requests")
+    m.inc("requests", 2)
+    m.inc("depth", -1)                                # gauge-style decrement
+    assert m.counter("requests") == 3.0
+    assert m.counter("depth") == -1.0
+    assert m.counter("missing") == 0.0
+    for v in (0.001, 0.002, 0.004):
+        m.observe("latency_s", v)
+    assert m.percentiles("latency_s").keys() == {"p50", "p90", "p99"}
+    assert m.percentiles("missing") == {}
+    snap = m.snapshot()
+    assert snap["counters"]["requests"] == 3.0
+    assert snap["histograms"]["latency_s"]["count"] == 3
+    assert m.histogram("latency_s").count == 3
+    m.reset()
+    assert m.counter("requests") == 0.0 and m.snapshot()["counters"] == {}
+
+
+def test_metrics_custom_bounds_on_first_observe():
+    m = Metrics()
+    m.observe("queue_depth", 3, bounds=range(1, 11))
+    assert m.histogram("queue_depth").bounds == tuple(range(1, 11))
+
+
+def test_merge_snapshots_sums_counters():
+    a = Metrics()
+    b = Metrics()
+    a.inc("requests", 2)
+    b.inc("requests", 3)
+    b.inc("bytes_moved", 100)
+    merged = merge_snapshots([a.snapshot(), b.snapshot()])
+    assert merged["counters"] == {"requests": 5.0, "bytes_moved": 100.0}
+    assert set(merged["histograms"]) == {"0", "1"}

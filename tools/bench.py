@@ -27,7 +27,12 @@ validates its schema and compares it against the committed baseline.
 ``--smoke`` keeps everything CI-sized (small scale, few requests, the
 characterization slice only).
 
-    PYTHONPATH=src python tools/bench.py --smoke --banks 8 --out BENCH_PR5.json
+The artifact also embeds an ``observability`` object (DESIGN.md §11): the
+measured tracing overhead (traced vs untraced best-of-reps — gated < 5% by
+``check_bench.py``), span counts/tracks from the traced leg, and the
+p50/p90/p99 latency stats the upgraded ``session.stats()`` reports.
+
+    PYTHONPATH=src python tools/bench.py --smoke --banks 8 --out BENCH_PR6.json
     PYTHONPATH=src python tools/bench.py roofline            # 4th subcommand
 """
 from __future__ import annotations
@@ -150,6 +155,82 @@ def _scaling_section(session, names, smoke: bool) -> dict:
             "rank_weak": rank_weak, "weak_gated": not failed}
 
 
+def _observability_section(grid, names, smoke: bool) -> dict:
+    """The artifact's ``observability`` object (DESIGN.md §11): tracing
+    overhead measured as best-of-reps traced vs untraced ``map()`` time on
+    one pipelineable workload (alternating legs so clock drift hits both
+    sides), plus span counts/tracks from the traced legs and the
+    percentile / per-stage / counter stats the session reported."""
+    import time
+
+    import numpy as np
+
+    from repro import pim
+    from repro.runtime.trace import NULL_TRACER, Tracer, set_tracer
+
+    registry = pim.registry()
+    wl = next((n for n in names if registry[n].pipelineable), None)
+    if wl is None:
+        return {"workload": None}     # nothing to measure; validator skips
+    entry = registry[wl]
+    rng = np.random.default_rng(0)
+    n_req = 3 if smoke else 6
+    args_list = [entry.make_args(rng, 1 if smoke else 2)
+                 for _ in range(n_req)]
+
+    # trace=False: the session must not install its own tracer (REPRO_TRACE
+    # may be set in CI) — the legs below switch the active tracer explicitly
+    sess = pim.PimSession(grid=grid, trace=False)
+    sess.map(wl, args_list)              # warm this chunk shape's compile
+    sess.telemetry.reset()
+    tracer = Tracer()
+    # enough alternating legs for both mins to converge on a noisy shared
+    # host — at 5 reps the measured overhead swung from +1% to +11%
+    reps, untraced, traced = 11, float("inf"), float("inf")
+    prev = set_tracer(NULL_TRACER)
+    try:
+        for _ in range(reps):
+            set_tracer(NULL_TRACER)
+            t0 = time.perf_counter()
+            sess.map(wl, args_list)
+            untraced = min(untraced, time.perf_counter() - t0)
+            set_tracer(tracer)
+            t0 = time.perf_counter()
+            sess.map(wl, args_list)
+            traced = min(traced, time.perf_counter() - t0)
+    finally:
+        set_tracer(prev)
+    agg = sess.stats()
+    sess.close()
+    # the relative overhead is the headline, but on a smoke run the map legs
+    # are single-digit ms while host noise is ±ms-scale — the ratio cannot
+    # resolve a few-hundred-µs true delta.  The gate's stable fallback is
+    # the *directly measured* per-span emission cost: a tight loop over a
+    # representative tagged emit, immune to scheduler noise and exactly the
+    # thing the "near-free when on" promise is about
+    probe = Tracer()
+    n_probe = 10000
+    t0 = time.perf_counter()
+    for i in range(n_probe):
+        probe.emit("compute", "dpu", 0.0, 1.0, workload=wl, req=0, chunk=i)
+    emit_us = (time.perf_counter() - t0) / n_probe * 1e6
+    return {
+        "workload": wl,
+        "requests": n_req,
+        "reps": reps,
+        "untraced_s": untraced,
+        "traced_s": traced,
+        "overhead_frac": traced / untraced - 1.0,
+        "emit_us_per_span": emit_us,
+        "spans": len(tracer.spans),
+        "dropped_spans": tracer.dropped,
+        "tracks": sorted({s.track for s in tracer.spans}),
+        "stats": {"percentiles": agg.get("percentiles", {}),
+                  "stage_seconds": agg.get("stage_seconds", {}),
+                  "counters": agg.get("counters", {})},
+    }
+
+
 def collect(grid=None, workloads=None, *, n_requests: int = 6,
             scale: int = 2, smoke: bool = False,
             pr_tag: str | None = None) -> dict:
@@ -187,6 +268,7 @@ def collect(grid=None, workloads=None, *, n_requests: int = 6,
             r for fig in mb.ALL for r in
             (fig(fast=True) if fig is mb.fig4_arith_throughput else fig())],
         "scaling": _scaling_section(session, names, smoke),
+        "observability": _observability_section(session.grid, names, smoke),
         # the fourth benchmark: rows ride along when dry-run records exist
         # ([] otherwise — the LM roofline needs repro.launch.dryrun output)
         "roofline": rl.rows(rl.load_records()),

@@ -72,6 +72,31 @@ def scaling_table(rows: list, title: str) -> list[str]:
     return lines
 
 
+def observability_table(obs: dict) -> list[str]:
+    """Tracing overhead + latency percentiles (schema repro-bench/3)."""
+    if not obs or obs.get("workload") is None:
+        return []
+    lines = [
+        "",
+        "#### Observability: tracing overhead & latency percentiles",
+        "",
+        f"workload `{obs['workload']}` · {obs.get('spans', 0)} spans on "
+        f"{len(obs.get('tracks', []))} tracks · "
+        f"{obs.get('dropped_spans', 0)} dropped · overhead "
+        f"{obs.get('overhead_frac', 0.0):+.1%} end-to-end, "
+        f"{obs.get('emit_us_per_span', 0.0):.1f}us/span emission "
+        "(gated < 5% or < 25us/span)",
+    ]
+    pcts = obs.get("stats", {}).get("percentiles", {})
+    if pcts:
+        lines += ["", "| metric | p50 | p90 | p99 |", "|---|---|---|---|"]
+        for name, row in pcts.items():
+            lines.append(
+                f"| {name} | {_fmt(row.get('p50'), 5)} "
+                f"| {_fmt(row.get('p90'), 5)} | {_fmt(row.get('p99'), 5)} |")
+    return lines
+
+
 def summarize(doc: dict) -> str:
     env, settings = doc["env"], doc["settings"]
     kind = "smoke" if settings.get("smoke") else "full"
@@ -93,6 +118,7 @@ def summarize(doc: dict) -> str:
             doc.get("scaling", {}).get("rank_weak", []),
             "Rank weak scaling (problem ∝ ranks; gated by check_bench.py)",
         ),
+        *observability_table(doc.get("observability", {})),
     ]
     return "\n".join(lines) + "\n"
 

@@ -27,7 +27,12 @@ Two layers:
   differences; ``--force-ratio`` overrides), and absolute timings only gate
   under ``--strict-timing`` (same-machine diffs).
 
-    python tools/check_bench.py BENCH_PR5.json BENCH_ci.json [--threshold 0.25]
+``validate`` also gates the ``observability`` object (schema repro-bench/3):
+the measured tracing overhead (traced vs untraced best-of-reps,
+DESIGN.md §11) must stay under :data:`OVERHEAD_GATE` — the runtime's
+"off by default, near-free when on" promise, checked on every artifact.
+
+    python tools/check_bench.py BENCH_PR6.json BENCH_ci.json [--threshold 0.25]
 """
 from __future__ import annotations
 
@@ -37,11 +42,21 @@ import math
 import pathlib
 import sys
 
-SCHEMA = "repro-bench/2"
+SCHEMA = "repro-bench/3"
 
 #: relative drop in overlap speedup (or rise in time, with --strict-timing)
 #: tolerated before the gate fails
 DEFAULT_THRESHOLD = 0.25
+
+#: max tolerated measured tracing overhead (traced/untraced - 1): tracing
+#: that costs more than this is no longer "low-overhead observability"
+OVERHEAD_GATE = 0.05
+
+#: absolute fallback for the overhead gate: on smoke runs the map legs are
+#: single-digit ms against ±ms host noise, so the relative measure cannot
+#: resolve the true delta — the artifact then passes on the directly
+#: measured per-span emission cost (tight-loop probe) staying bounded
+PER_SPAN_GATE_US = 25.0
 
 #: tolerated relative drop in weak-scaling throughput between consecutive
 #: rank counts (the monotone weak-scaling invariant)
@@ -112,6 +127,52 @@ def _check_weak_scaling(rows, where: str, errors: list[str],
                     "with the rank count")
 
 
+def _check_observability(obs, errors: list[str]) -> None:
+    """The ``observability`` object: measured tracing overhead under the
+    gate, sane span counts, and the latency percentiles the upgraded
+    ``session.stats()`` promises (DESIGN.md §11)."""
+    where = "observability"
+    if obs.get("workload") is None:
+        return      # no pipelineable workload was available to measure
+    for key in ("untraced_s", "traced_s"):
+        if not _finite_pos(obs.get(key)):
+            errors.append(f"{where}.{key}: want finite > 0, "
+                          f"got {obs.get(key)!r}")
+    oh = obs.get("overhead_frac")
+    ps = obs.get("emit_us_per_span")
+    if not (isinstance(oh, (int, float)) and math.isfinite(oh)):
+        errors.append(f"{where}.overhead_frac: want finite number, "
+                      f"got {oh!r}")
+    elif not (isinstance(ps, (int, float)) and math.isfinite(ps)):
+        errors.append(f"{where}.emit_us_per_span: want finite number, "
+                      f"got {ps!r}")
+    elif oh >= OVERHEAD_GATE and ps >= PER_SPAN_GATE_US:
+        # either bound suffices: <5% relative where the run is big enough
+        # to resolve it, or the probe-measured per-span emission cost
+        # staying bounded where it is not
+        errors.append(
+            f"{where}.overhead_frac: measured tracing overhead {oh:.1%} "
+            f">= {OVERHEAD_GATE:.0%} gate and span emission {ps:.1f}us >= "
+            f"{PER_SPAN_GATE_US:.0f}us — span emission must stay "
+            "near-free (guarded fast path, no timing of its own)")
+    if not (isinstance(obs.get("spans"), int) and obs["spans"] >= 1):
+        errors.append(f"{where}.spans: want int >= 1, "
+                      f"got {obs.get('spans')!r}")
+    if not (isinstance(obs.get("dropped_spans"), int)
+            and obs["dropped_spans"] >= 0):
+        errors.append(f"{where}.dropped_spans: want int >= 0, "
+                      f"got {obs.get('dropped_spans')!r}")
+    stats = obs.get("stats")
+    if not isinstance(stats, dict):
+        errors.append(f"{where}.stats: must be an object")
+        return
+    pcts = stats.get("percentiles", {}).get("latency_s", {})
+    for p in ("p50", "p90", "p99"):
+        if not _finite_pos(pcts.get(p)):
+            errors.append(f"{where}.stats.percentiles.latency_s.{p}: "
+                          f"want finite > 0, got {pcts.get(p)!r}")
+
+
 def validate(doc) -> list[str]:
     """Structural schema check; returns a list of errors (empty = valid)."""
     errors: list[str] = []
@@ -119,11 +180,13 @@ def validate(doc) -> list[str]:
         return ["artifact must be a JSON object"]
     if doc.get("schema") != SCHEMA:
         errors.append(f"schema: want {SCHEMA!r}, got {doc.get('schema')!r}")
-    for key in ("env", "settings", "model", "workloads", "scaling"):
+    for key in ("env", "settings", "model", "workloads", "scaling",
+                "observability"):
         if not isinstance(doc.get(key), dict):
             errors.append(f"missing or non-object top-level key {key!r}")
     if errors:
         return errors
+    _check_observability(doc["observability"], errors)
 
     env = doc["env"]
     for key in ("python", "jax", "platform"):
