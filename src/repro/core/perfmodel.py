@@ -147,6 +147,22 @@ class DpuModel:
         return fit_affine(sizes, cycles)
 
 
+def mram_capacity_bytes(n_banks: int, model: DpuModel = DpuModel(),
+                        reserve_frac: float = 0.5) -> int:
+    """Residency budget for a grid of ``n_banks`` banks (DESIGN.md §12).
+
+    Each bank models one DPU's 64 MB MRAM; ``reserve_frac`` of every bank
+    is held back for the operands that still stream per request (chunk
+    double-buffers, outputs, broadcast constants), mirroring how UPMEM
+    programs slice MRAM between the resident operand and the per-launch
+    working set.  The remainder is what the resident-operand cache may
+    budget across the whole grid.
+    """
+    if not 0.0 <= reserve_frac < 1.0:
+        raise ValueError(f"reserve_frac must be in [0, 1), got {reserve_frac}")
+    return int(n_banks * model.mram_bytes * (1.0 - reserve_frac))
+
+
 @dataclasses.dataclass(frozen=True)
 class DpuSystemModel:
     """A full UPMEM system = n_dpus independent DpuModels + host bus (paper §2.1/3.4)."""

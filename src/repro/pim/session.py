@@ -42,8 +42,11 @@ from typing import TYPE_CHECKING, Any, Iterable, Mapping, Sequence
 import numpy as np
 
 from repro.core.banked import BankGrid, make_bank_grid, make_rank_grid
+from repro.core.perfmodel import mram_capacity_bytes
 from repro.runtime.autotune import DEFAULT_N_CHUNKS, TuningResult
-from repro.runtime.pipeline import run_pipelined_ranked
+from repro.runtime.pipeline import (_effective_chunks, _resolve_ranks,
+                                    run_pipelined_ranked)
+from repro.runtime.resident import ResidentCache
 from repro.runtime.scheduler import PimRequest, PimScheduler
 from repro.runtime.telemetry import Telemetry
 from repro.runtime.trace import NULL_SPAN, Tracer, set_tracer
@@ -104,7 +107,8 @@ class PimSession:
                  max_batch_requests: int = 8,
                  max_batch_bytes: int = 256 << 20,
                  telemetry: Telemetry | None = None,
-                 trace: bool | str | None = None):
+                 trace: bool | str | None = None,
+                 resident: bool | int | ResidentCache = True):
         if grid is not None and (banks is not None or ranks is not None
                                  or banks_per_rank is not None):
             raise ValueError("pass either grid= or a banks/ranks shape, "
@@ -129,11 +133,23 @@ class PimSession:
         self._tuning: TuningResult | None = None
         if isinstance(plans, TuningResult):
             self._tuning, plans = plans, plans.plans
+        telemetry = telemetry if telemetry is not None else Telemetry()
+        # resident-operand cache (DESIGN.md §12): on by default, budgeted
+        # against the per-bank MRAM capacity model; an int is an explicit
+        # byte budget (resident=False disables — every request re-scatters)
+        if isinstance(resident, ResidentCache):
+            cache = resident
+        elif resident:
+            budget = (resident if not isinstance(resident, bool)
+                      else mram_capacity_bytes(self._grid.n_banks))
+            cache = ResidentCache(budget, metrics=telemetry.metrics)
+        else:
+            cache = None
         self._sched = PimScheduler(
             self._grid, n_chunks=n_chunks,
             max_batch_requests=max_batch_requests,
             max_batch_bytes=max_batch_bytes, plans=plans,
-            telemetry=telemetry)
+            telemetry=telemetry, cache=cache)
         # tracing (DESIGN.md §11): off by default; ``trace=True`` records
         # spans for explicit trace_export(), a path (or the REPRO_TRACE env
         # var when trace is None) also auto-exports at close().  The session
@@ -200,6 +216,12 @@ class PimSession:
         return tuple(self._sched.workloads) + tuple(self._sched.serialized)
 
     @property
+    def cache(self) -> ResidentCache | None:
+        """The resident-operand cache (DESIGN.md §12); None when the
+        session was opened with ``resident=False``."""
+        return self._sched.cache
+
+    @property
     def closed(self) -> bool:
         return self._closed
 
@@ -229,13 +251,11 @@ class PimSession:
     def stats(self) -> dict:
         """Aggregate telemetry + live metrics (DESIGN.md §11): requests/sec,
         mean/min/max latency, p50/p90/p99 percentiles, per-stage seconds,
-        per-workload breakdown, raw counters, and — when tracing — span
-        counts."""
-        out = self.telemetry.aggregate()
-        snap = self.telemetry.metrics.snapshot()
-        out["counters"] = snap["counters"]
-        if "queue_depth" in snap["histograms"]:
-            out["queue_depth"] = snap["histograms"]["queue_depth"]
+        per-workload breakdown, raw counters, residency-cache counters
+        (``cache``), and — when tracing — span counts."""
+        out = self.telemetry.stats()      # merged telemetry + metrics view
+        if self.cache is not None:
+            out["cache"] = self.cache.stats()
         if self._tracer is not None:
             out["trace"] = {"spans": len(self._tracer.spans),
                             "dropped_spans": self._tracer.dropped}
@@ -330,7 +350,8 @@ class PimSession:
         results = run_pipelined_ranked(
             self._grid, self._sched.workloads[workload], args_list,
             n_chunks=self._sched.n_chunks,
-            plan=self._sched.plans.get(workload), records=records)
+            plan=self._sched.plans.get(workload), records=records,
+            cache=self._sched.cache)
         for rec, res in zip(records, results):
             rec.bytes_out = res.nbytes if isinstance(res, np.ndarray) else 0
             self.telemetry.record(rec)
@@ -362,6 +383,66 @@ class PimSession:
         self._check_open("transfer_out")
         return self._grid.from_banks(x)
 
+    # -- operand residency (DESIGN.md §12) -------------------------------------
+
+    def pin(self, workload: str, *args) -> str:
+        """Pre-place ``workload``'s resident operand on the banks and pin it
+        against LRU eviction — the ``dpu_copy_to``-once escape hatch.
+
+        ``args`` is the full positional argument tuple the later
+        ``run()``/``submit()`` calls will pass (the non-resident positions
+        only key the fingerprint through the resident ones, so any value of
+        the varying args works).  The operand is split and scattered in
+        exactly the placement the serving path will use (same chunk depth,
+        same rank blocks), so the first real request is already warm.
+        Returns the entry's fingerprint (pass it to :meth:`unpin`).
+        """
+        self._check_open("pin")
+        cache = self._sched.cache
+        if cache is None:
+            raise RuntimeError("pin() on a session opened with "
+                               "resident=False")
+        wl = self._sched.workloads.get(workload)
+        if wl is None or not wl.supports_residency:
+            raise ValueError(f"workload {workload!r} has no resident "
+                             "operand (see the registry's resident column)")
+        plan = self._sched.plans.get(workload)
+        n_ranks = _resolve_ranks(self._grid, None, plan)
+        n_chunks, _ = _effective_chunks(wl, self._sched.n_chunks, plan,
+                                        cache)
+        total = n_ranks * n_chunks if n_ranks > 1 else n_chunks
+        ent, _ = cache.acquire(wl, args, (self.n_banks, n_ranks, total),
+                               pin=True)
+        if ent is None:
+            raise RuntimeError(
+                f"{workload} operand does not fit the residency budget "
+                f"({cache.budget_bytes} bytes) even after eviction")
+        if not ent.ready:
+            res = tuple(args[j] for j in wl.resident_args)
+            for r in range(n_ranks):
+                view = (self._grid.rank_view(r) if n_ranks > 1
+                        else self._grid)
+                rm0, res_chunks = wl.split_resident(view, total, *res)
+                rm = ent.set_rank_meta(r, rm0,
+                                       n_chunks=len(res_chunks or ()))
+                if res_chunks is not None:
+                    per = -(-len(res_chunks) // n_ranks)
+                    for g in range(r * per,
+                                   min((r + 1) * per, len(res_chunks))):
+                        with ent.lock:
+                            if ent.get(g) is None:
+                                ent.store(g, wl.scatter(view, rm,
+                                                        res_chunks[g]))
+        return ent.fingerprint
+
+    def unpin(self, fingerprint: str) -> bool:
+        """Release a :meth:`pin`: the entry stays resident but becomes
+        evictable again.  Returns False when the fingerprint is unknown
+        (already evicted, or the cache is disabled)."""
+        self._check_open("unpin")
+        cache = self._sched.cache
+        return cache.unpin(fingerprint) if cache is not None else False
+
     # -- lifecycle ------------------------------------------------------------
 
     def start(self) -> "PimSession":
@@ -384,6 +465,8 @@ class PimSession:
             self._serving = False
         elif self._sched.pending():
             self._sched.drain()      # no future may be left dangling
+        if self._sched.cache is not None:
+            self._sched.cache.clear()    # release resident device arrays
         if self._tracer is not None:
             if self._trace_path:
                 self._tracer.export(self._trace_path)

@@ -103,6 +103,28 @@ class ChunkedWorkload:
       compute(grid, meta, bufs)    -> device outs             bank-local
       retrieve(grid, meta, outs)   -> host partial            bank→CPU
       merge(grid, meta, parts)     -> result                  host-side
+
+    Residency extension (DESIGN.md §12): a workload whose dominant operand
+    is a per-request *constant* (GEMV's matrix, BS's sorted array, SpMV's
+    matrix, MLP's weights) declares which positional args are residency
+    candidates and factors ``split`` into a resident half and a varying
+    half, so the operand cache can keep the expensive part on the banks:
+
+      resident_args                 — positional indices into *args of the
+                                      operands worth caching (content-hashed)
+      split_resident(grid, total, *res)
+          -> (res_meta, res_chunks|None)   device constants + the chunk list
+                                      that carries the resident operand
+                                      (None when it lives in res_meta only,
+                                      e.g. BS's broadcast array)
+      split_varying(grid, total, res_meta, *args)
+          -> (meta, chunks|None)     per-request meta built *on top of*
+                                      res_meta; chunks for the varying
+                                      operand, or None when the resident
+                                      chunks are the pipeline's chunks
+
+    ``split`` must equal the composition of the two halves; workloads
+    without a resident operand leave the three fields at their defaults.
     """
     name: str
     split: Callable
@@ -110,6 +132,19 @@ class ChunkedWorkload:
     compute: Callable
     retrieve: Callable
     merge: Callable
+    resident_args: tuple = ()
+    split_resident: Callable | None = None
+    split_varying: Callable | None = None
+    #: True when the resident operand lives entirely in the resident meta
+    #: (BS's broadcast array) rather than the chunk stream — warm hits then
+    #: skip the split-time broadcast but still scatter the varying chunks.
+    meta_resident: bool = False
+
+    @property
+    def supports_residency(self) -> bool:
+        return (bool(self.resident_args)
+                and self.split_resident is not None
+                and self.split_varying is not None)
 
 
 #: name -> ChunkedWorkload, filled by workload modules at import time.

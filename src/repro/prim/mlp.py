@@ -63,12 +63,28 @@ def _local(grid: BankGrid):
         in_specs=(P(AXIS), P())))
 
 
-def _split(grid, n_chunks, weights, x):
-    h = grid.broadcast(np.asarray(x))
-    for w in weights[:-1]:
-        h = jnp.maximum(grid.broadcast(np.asarray(w)) @ h, 0)
+# The weight stack is the residency candidate (DESIGN.md §12): the hidden
+# layers stay broadcast on the banks as device constants and the final
+# layer's row chunks are the pipeline's chunks, so a warm hit pays only the
+# tiny input broadcast + the replicated hidden forward pass per request.
+
+def _split_resident(grid, n_chunks, weights):
+    dws = [grid.broadcast(np.asarray(w)) for w in weights[:-1]]
     chunks, m = tx.split_chunks(np.asarray(weights[-1]), n_chunks)
-    return {"m": m, "per": chunks[0].shape[0], "dh": h}, chunks
+    return {"m": m, "per": chunks[0].shape[0], "dws": dws}, chunks
+
+
+def _split_varying(grid, n_chunks, res_meta, weights, x):
+    h = grid.broadcast(np.asarray(x))
+    for dw in res_meta["dws"]:
+        h = jnp.maximum(dw @ h, 0)
+    return {"m": res_meta["m"], "per": res_meta["per"], "dh": h}, None
+
+
+def _split(grid, n_chunks, weights, x):
+    res_meta, chunks = _split_resident(grid, n_chunks, weights)
+    meta, _ = _split_varying(grid, n_chunks, res_meta, weights, x)
+    return meta, chunks
 
 
 def _scatter(grid, meta, chunk):
@@ -89,4 +105,6 @@ def _merge(grid, meta, parts):
 
 
 chunked = register_chunked(ChunkedWorkload(
-    "MLP", _split, _scatter, _compute, _retrieve, _merge))
+    "MLP", _split, _scatter, _compute, _retrieve, _merge,
+    resident_args=(0,), split_resident=_split_resident,
+    split_varying=_split_varying))

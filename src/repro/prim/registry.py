@@ -73,6 +73,19 @@ class WorkloadEntry:
     def pipelineable(self) -> bool:
         return self.chunked is not None
 
+    @property
+    def resident_args(self) -> tuple:
+        """Positional arg indices of the residency-candidate operands
+        (DESIGN.md §12) — () for workloads with nothing worth caching."""
+        return self.chunked.resident_args if self.chunked is not None else ()
+
+    @property
+    def resident(self) -> bool:
+        """Whether the workload declares a resident operand the session's
+        operand cache can keep on the banks across requests."""
+        return (self.chunked is not None
+                and self.chunked.supports_residency)
+
     def run_variants(self) -> Mapping[str, Callable]:
         """label -> serialized pim callable (scaling-table sweep)."""
         return self.variants or {self.name: self.pim}
@@ -217,14 +230,21 @@ assert set(PIPELINEABLE) == set(CHUNKED), (sorted(PIPELINEABLE),
 
 def markdown_table() -> str:
     """The README workload table (regenerate: python -m repro.prim.registry)."""
-    lines = ["| workload | paper | module | variants | chunked pipeline |",
-             "|---|---|---|---|---|"]
+    lines = ["| workload | paper | module | variants | chunked pipeline "
+             "| resident operand |",
+             "|---|---|---|---|---|---|"]
     for e in REGISTRY.values():
         variants = ", ".join(e.run_variants())
         chunked = "yes" if e.pipelineable else "no — serialized `pim()` only"
+        if e.resident:
+            kind = ("meta (broadcast)" if e.chunked.meta_resident
+                    else "chunks")
+            resident = f"arg {', '.join(map(str, e.resident_args))} — {kind}"
+        else:
+            resident = "—"
         lines.append(f"| {e.name} | {e.section} | "
                      f"`prim/{e.module.__name__.split('.')[-1]}.py` | "
-                     f"{variants} | {chunked} |")
+                     f"{variants} | {chunked} | {resident} |")
     return "\n".join(lines)
 
 

@@ -21,6 +21,7 @@ from .autotune import (StageFit, TunedPlan, TuningResult, WorkloadProfile,
 from .metrics import Histogram, Metrics, merge_snapshots
 from .pipeline import (PipelineResult, run_pipelined, run_pipelined_many,
                        run_pipelined_ranked)
+from .resident import ResidentCache, ResidentEntry, fingerprint
 from .scheduler import PimRequest, PimScheduler
 from .telemetry import RequestRecord, Telemetry
 from .trace import NULL_TRACER, Span, Tracer, get_tracer, set_tracer
@@ -28,6 +29,7 @@ from .trace import NULL_TRACER, Span, Tracer, get_tracer, set_tracer
 __all__ = ["PipelineResult", "run_pipelined", "run_pipelined_many",
            "run_pipelined_ranked",
            "PimRequest", "PimScheduler", "RequestRecord", "Telemetry",
+           "ResidentCache", "ResidentEntry", "fingerprint",
            "Histogram", "Metrics", "merge_snapshots",
            "NULL_TRACER", "Span", "Tracer", "get_tracer", "set_tracer",
            "StageFit", "TunedPlan", "TuningResult", "WorkloadProfile",

@@ -148,6 +148,18 @@ class WorkloadProfile:
         return (t_push + t_comp + t_pull
                 + (n_chunks - 1) * max(t_push, t_comp, t_pull))
 
+    def warm_pipeline_time(self, n_chunks: int) -> float:
+        """Makespan when the scatter stage is elided (DESIGN.md §12): a
+        resident-cache hit serves every chunk's device buffers from the
+        entry, so the pipeline degenerates to two stages —
+
+            T_warm(C) = t_comp + t_pull + (C - 1) * max(t_comp, t_pull)
+
+        The warm optimum can differ from the cold one (push was often the
+        bottleneck stage), which is why a plan carries both solves."""
+        _, t_comp, t_pull = self.stage_times(n_chunks)
+        return t_comp + t_pull + (n_chunks - 1) * max(t_comp, t_pull)
+
     def as_dict(self) -> dict:
         return {"workload": self.workload, "bytes_in": self.bytes_in,
                 "bytes_out": self.bytes_out,
@@ -171,7 +183,15 @@ class TunedPlan:
     the pipeline shards each request's chunks across.  1 = flat pipeline
     over all banks (the pre-rank behavior and the only option on a flat
     grid); ``rank_measured_s`` holds the per-candidate end-to-end
-    measurements the adoption was based on."""
+    measurements the adoption was based on.
+
+    The ``warm_*`` fields are the second solve for resident-cache hit
+    paths (DESIGN.md §12), where the scatter stage drops out of the
+    makespan: ``warm_n_chunks`` is the two-stage optimum the pipeline
+    adopts whenever the cache is in play (cold fills use it too, so the
+    fingerprint's placement stays consistent between fill and hit);
+    ``warm_n_chunks == 0`` means no warm solve (workload not
+    chunk-resident, or plan predates residency)."""
 
     workload: str
     n_chunks: int
@@ -184,6 +204,11 @@ class TunedPlan:
     n_ranks: int = 1
     rank_measured_s: Mapping[int, float] = dataclasses.field(
         default_factory=dict)
+    warm_n_chunks: int = 0
+    warm_predicted_pipelined_s: float = 0.0
+    warm_predicted_overlap: float = 0.0
+    warm_candidate_s: Mapping[int, float] = dataclasses.field(
+        default_factory=dict)
 
     def as_dict(self) -> dict:
         return {"workload": self.workload, "n_chunks": self.n_chunks,
@@ -195,7 +220,12 @@ class TunedPlan:
                 "measured_s": {str(k): v for k, v in self.measured_s.items()},
                 "n_ranks": self.n_ranks,
                 "rank_measured_s": {str(k): v for k, v
-                                    in self.rank_measured_s.items()}}
+                                    in self.rank_measured_s.items()},
+                "warm_n_chunks": self.warm_n_chunks,
+                "warm_predicted_pipelined_s": self.warm_predicted_pipelined_s,
+                "warm_predicted_overlap": self.warm_predicted_overlap,
+                "warm_candidate_s": {str(k): v for k, v
+                                     in self.warm_candidate_s.items()}}
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "TunedPlan":
@@ -210,7 +240,12 @@ class TunedPlan:
                     for k, v in d.get("measured_s", {}).items()},
                    int(d.get("n_ranks", 1)),
                    {int(k): float(v)
-                    for k, v in d.get("rank_measured_s", {}).items()})
+                    for k, v in d.get("rank_measured_s", {}).items()},
+                   int(d.get("warm_n_chunks", 0)),
+                   float(d.get("warm_predicted_pipelined_s", 0.0)),
+                   float(d.get("warm_predicted_overlap", 0.0)),
+                   {int(k): float(v)
+                    for k, v in d.get("warm_candidate_s", {}).items()})
 
 
 @dataclasses.dataclass
@@ -320,8 +355,14 @@ def profile_workload(grid: BankGrid, entry: "WorkloadEntry", args: tuple,
 # -- planning ----------------------------------------------------------------
 
 def plan_for(profile: WorkloadProfile,
-             candidates: Sequence[int] = CHUNK_CANDIDATES) -> TunedPlan:
-    """Overlap-maximizing chunk count + fill-amortizing batch size."""
+             candidates: Sequence[int] = CHUNK_CANDIDATES,
+             warm: bool = False) -> TunedPlan:
+    """Overlap-maximizing chunk count + fill-amortizing batch size.
+
+    ``warm=True`` additionally solves the two-stage warm model (scatter
+    elided on resident-cache hits, DESIGN.md §12) over the same candidate
+    set — only meaningful for chunk-resident workloads, where a hit
+    actually removes the push stage from the pipeline."""
     cand = sorted(set(candidates) | {1})
     times = {c: profile.pipeline_time(c) for c in cand}
     best = min(cand, key=lambda c: (times[c], c))    # ties -> fewer chunks
@@ -335,13 +376,22 @@ def plan_for(profile: WorkloadProfile,
     fill = max(times[best] - steady, 0.0)            # paid once per batch
     batch = max(1, math.ceil(fill / (FILL_OVERHEAD_TARGET
                                      * max(steady, _EPS_S))))
+    warm_fields: dict = {}
+    if warm:
+        wtimes = {c: profile.warm_pipeline_time(c) for c in cand}
+        wbest = min(cand, key=lambda c: (wtimes[c], c))
+        warm_fields = dict(
+            warm_n_chunks=wbest,
+            warm_predicted_pipelined_s=wtimes[wbest],
+            warm_predicted_overlap=serialized / max(wtimes[wbest], _EPS_S),
+            warm_candidate_s=wtimes)
     return TunedPlan(
         workload=profile.workload, n_chunks=best,
         max_batch_requests=min(batch, MAX_BATCH_REQUESTS),
         predicted_serialized_s=serialized,
         predicted_pipelined_s=times[best],
         predicted_overlap=serialized / max(times[best], _EPS_S),
-        candidate_s=times)
+        candidate_s=times, **warm_fields)
 
 
 def probe_candidates(plan: TunedPlan, k: int = 2,
@@ -453,7 +503,12 @@ def autotune(grid: BankGrid, entries: Sequence["WorkloadEntry"] | None = None,
             continue
         args = entry.make_args(rng, scale)
         prof = profile_workload(grid, entry, args, reps=reps)
-        plan = plan_for(prof, candidates)
+        w = entry.chunked
+        # warm solve only where a hit truly elides the push stage: chunk-
+        # resident workloads (meta-resident ones — BS — still scatter their
+        # varying chunks; their warm win is the skipped split broadcast)
+        plan = plan_for(prof, candidates,
+                        warm=w.supports_residency and not w.meta_resident)
         if probe:
             plan = probe_plan(grid, entry, plan, [args])
             if n_ranks > 1:

@@ -120,6 +120,12 @@ class Metrics:
         with self._lock:
             self._counters[name] = self._counters.get(name, 0.0) + value
 
+    def set_gauge(self, name: str, value: float) -> None:
+        """Overwrite counter ``name`` with an absolute level (gauge
+        semantics — the resident cache publishes resident_bytes this way)."""
+        with self._lock:
+            self._counters[name] = value
+
     def observe(self, name: str, value: float,
                 bounds: Sequence[float] | None = None) -> None:
         """Record one observation into histogram ``name`` (created on first

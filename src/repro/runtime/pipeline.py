@@ -78,17 +78,65 @@ class _Buckets:
         return t1
 
 
-def run_pipelined(grid: BankGrid, workload: ChunkedWorkload, *args,
-                  n_chunks: int = 4, plan: TunedPlan | None = None,
-                  record: RequestRecord | None = None) -> PipelineResult:
-    """Run one request through the chunk pipeline; returns PipelineResult.
-    A :class:`~repro.runtime.autotune.TunedPlan` overrides ``n_chunks``."""
+def _effective_chunks(workload, n_chunks, plan, cache) -> tuple[int, bool]:
+    """Resolve the pipeline depth and whether the resident cache is in play.
+
+    A plan overrides ``n_chunks``; when the cache applies and the plan
+    carries a warm solve, the *warm* depth wins for cold fills too — the
+    fingerprint bakes in the chunk count (placement spec), so fill and hit
+    must agree on one depth for the fill to ever be reused."""
+    use_cache = cache is not None and workload.supports_residency
     if plan is not None:
         n_chunks = plan.n_chunks
+        if use_cache and getattr(plan, "warm_n_chunks", 0):
+            n_chunks = plan.warm_n_chunks
+    return n_chunks, use_cache
+
+
+def _split_with_cache(view, workload, args, total, ent, rank=0, hit=False):
+    """Split one request against a resident entry (or plainly when
+    ``ent`` is None).  Returns (meta, chunks) where chunks are ``None``
+    placeholders only on a warm **hit** — their device buffers already live
+    in the ready entry.  On a miss the real chunk list is always produced,
+    even when another request already installed the rank meta (a second
+    filler of the same fingerprint, or a retry after a failed fill, must be
+    able to push the buffers the entry is still missing; already-stored
+    chunks are deduplicated under the entry lock at scatter time)."""
+    if ent is None:
+        return workload.split(view, total, *args)
+    res = tuple(args[j] for j in workload.resident_args)
+    rm = ent.rank_meta(rank)
+    res_chunks = None
+    if rm is None:
+        rm0, res_chunks = workload.split_resident(view, total, *res)
+        rm = ent.set_rank_meta(rank, rm0,
+                               n_chunks=len(res_chunks or ()))
+    meta, var_chunks = workload.split_varying(view, total, rm, *args)
+    if ent.chunk_resident:
+        if hit:
+            chunks = [None] * ent.expected_chunks
+        elif res_chunks is None:
+            _, res_chunks = workload.split_resident(view, total, *res)
+            chunks = res_chunks
+        else:
+            chunks = res_chunks
+    else:
+        chunks = var_chunks
+    return meta, chunks
+
+
+def run_pipelined(grid: BankGrid, workload: ChunkedWorkload, *args,
+                  n_chunks: int = 4, plan: TunedPlan | None = None,
+                  record: RequestRecord | None = None,
+                  cache=None) -> PipelineResult:
+    """Run one request through the chunk pipeline; returns PipelineResult.
+    A :class:`~repro.runtime.autotune.TunedPlan` overrides ``n_chunks``;
+    a :class:`~repro.runtime.resident.ResidentCache` serves warm scatters."""
+    n_chunks, _ = _effective_chunks(workload, n_chunks, plan, cache)
     records = [record] if record is not None else None
     results, makespans, phases = run_pipelined_many(
         grid, workload, [args], n_chunks=n_chunks, plan=plan,
-        records=records, _full=True)
+        records=records, cache=cache, _full=True)
     return PipelineResult(results[0], makespans[0], phases[0], n_chunks)
 
 
@@ -96,7 +144,7 @@ def run_pipelined_many(grid: BankGrid, workload: ChunkedWorkload,
                        requests: Sequence[tuple], n_chunks: int = 4,
                        plan: TunedPlan | None = None,
                        records: Sequence[RequestRecord] | None = None,
-                       _full: bool = False):
+                       cache=None, _full: bool = False):
     """Stream every request's chunks through one double-buffered pipeline.
 
     ``requests`` is a sequence of argument tuples for ``workload``.  Returns
@@ -104,16 +152,19 @@ def run_pipelined_many(grid: BankGrid, workload: ChunkedWorkload,
     ``_full``).  Requests complete in submission order; a request's result is
     merged as soon as its last chunk retires, while later requests' chunks
     are already in flight.  A :class:`~repro.runtime.autotune.TunedPlan`
-    overrides ``n_chunks`` and stamps its predicted overlap on the records.
+    overrides ``n_chunks`` and stamps its predicted overlap on the records;
+    a :class:`~repro.runtime.resident.ResidentCache` lets requests whose
+    resident operand is already placed skip the scatter stage (DESIGN.md
+    §12) — served chunks emit ``scatter:cached`` spans instead of pushes.
     """
-    if plan is not None:
-        n_chunks = plan.n_chunks
-        if records is not None:
-            for rec in records:
-                rec.tuned = True
-                rec.predicted_overlap = plan.predicted_overlap
+    n_chunks, use_cache = _effective_chunks(workload, n_chunks, plan, cache)
+    if plan is not None and records is not None:
+        for rec in records:
+            rec.tuned = True
+            rec.predicted_overlap = plan.predicted_overlap
     n_req = len(requests)
     metas: list = [None] * n_req
+    entries: list = [None] * n_req        # ResidentEntry per request
     flat: list = []                       # (req_idx, chunk_idx, chunk)
     bucket = [_Buckets() for _ in range(n_req)]
     t_start = [0.0] * n_req
@@ -130,24 +181,59 @@ def run_pipelined_many(grid: BankGrid, workload: ChunkedWorkload,
 
     t0 = time.perf_counter()
     for i, args in enumerate(requests):
-        metas[i], chunks = workload.split(grid, n_chunks, *args)
+        ts = time.perf_counter()
+        ent, hit = (cache.acquire(workload, args, (grid.n_banks, 1, n_chunks))
+                    if use_cache else (None, False))
+        entries[i] = ent
+        metas[i], chunks = _split_with_cache(grid, workload, args,
+                                             n_chunks, ent, hit=hit)
+        if ent is not None and hit and not ent.chunk_resident and tr.enabled:
+            # meta-resident hit (BS): the skipped broadcast happened at
+            # split time, so the cached span lands here, not per chunk
+            tr.emit("scatter:cached", "cpu_dpu", ts, time.perf_counter(),
+                    workload=workload.name, req=_rid(i),
+                    bytes=ent.nbytes, fingerprint=ent.fingerprint)
         chunk_count[i] = len(chunks)
         flat.extend((i, ci, c) for ci, c in enumerate(chunks))
         if records is not None:
             records[i].n_chunks = len(chunks)
+            records[i].cache_hit = hit
+            if (hit and plan is not None
+                    and getattr(plan, "warm_predicted_overlap", 0.0)):
+                records[i].predicted_overlap = plan.warm_predicted_overlap
 
     def scatter(k):
         i, ci, chunk = flat[k]
         if not t_start[i]:
             t_start[i] = time.perf_counter()
         ts = time.perf_counter()
-        bufs = workload.scatter(grid, metas[i], chunk)
+        ent = entries[i]
+        served = False
+        if ent is not None and ent.chunk_resident:
+            # exactly-once device push: the entry lock is held across the
+            # scatter so a second filler of the same fingerprint can only
+            # observe the stored buffers, never race the push
+            with ent.lock:
+                bufs = ent.get(ci)
+                if bufs is None:
+                    bufs = workload.scatter(grid, metas[i], chunk)
+                    ent.store(ci, bufs)
+                else:
+                    served = True
+        else:
+            bufs = workload.scatter(grid, metas[i], chunk)
         t1 = bucket[i].add("cpu_dpu", ts)
         if tr.enabled:
-            if (nb := chunk_bytes.get(i)) is None:
-                nb = chunk_bytes[i] = tree_nbytes(chunk)
-            tr.emit("scatter", "cpu_dpu", ts, t1, workload=workload.name,
-                    req=_rid(i), chunk=ci, bytes=nb)
+            if served:
+                nb = ent.nbytes // max(1, ent.expected_chunks)
+                tr.emit("scatter:cached", "cpu_dpu", ts, t1,
+                        workload=workload.name, req=_rid(i), chunk=ci,
+                        bytes=nb, fingerprint=ent.fingerprint)
+            else:
+                if (nb := chunk_bytes.get(i)) is None:
+                    nb = chunk_bytes[i] = tree_nbytes(chunk)
+                tr.emit("scatter", "cpu_dpu", ts, t1, workload=workload.name,
+                        req=_rid(i), chunk=ci, bytes=nb)
         return bufs
 
     def retire(entry):
@@ -222,7 +308,8 @@ def _resolve_ranks(grid, n_ranks, plan) -> int:
     return max(1, min(want, have))
 
 
-def _rank_worker(view, workload, metas, stream, bucket, t_start, t_retired):
+def _rank_worker(view, workload, metas, stream, bucket, t_start, t_retired,
+                 entries=None):
     """One rank's double-buffered pipeline over its assigned chunk stream.
 
     ``stream`` is an ordered list of (req_idx, global_chunk_idx, chunk);
@@ -230,9 +317,13 @@ def _rank_worker(view, workload, metas, stream, bucket, t_start, t_retired):
     ``t_retired[i]`` with the wall time this rank retired request i's last
     chunk.  Same three-stage loop as :func:`run_pipelined_many`, minus the
     merge — parts go back to the caller, which merges across ranks in
-    global chunk order.  Spans land on this rank's own track: the caller
-    sets the tracer's thread-local track override to ``rank-r``
-    (DESIGN.md §11), so a traced run shows one pipeline lane per rank."""
+    global chunk order.  ``entries`` carries per-request resident-cache
+    entries (DESIGN.md §12): chunks whose buffers already live in the
+    entry are served instead of pushed, under the entry lock so disjoint
+    rank blocks and repeated fills stay exactly-once.  Spans land on this
+    rank's own track: the caller sets the tracer's thread-local track
+    override to ``rank-r`` (DESIGN.md §11), so a traced run shows one
+    pipeline lane per rank."""
     parts: dict[int, list] = {}
     if not stream:
         return parts
@@ -244,13 +335,30 @@ def _rank_worker(view, workload, metas, stream, bucket, t_start, t_retired):
         if not t_start[i]:
             t_start[i] = time.perf_counter()
         ts = time.perf_counter()
-        bufs = workload.scatter(view, metas[i], chunk)
+        ent = entries[i] if entries is not None else None
+        served = False
+        if ent is not None and ent.chunk_resident:
+            with ent.lock:
+                bufs = ent.get(gidx)
+                if bufs is None:
+                    bufs = workload.scatter(view, metas[i], chunk)
+                    ent.store(gidx, bufs)
+                else:
+                    served = True
+        else:
+            bufs = workload.scatter(view, metas[i], chunk)
         t1 = bucket[i].add("cpu_dpu", ts)
         if tr.enabled:
-            if (nb := chunk_bytes.get(i)) is None:
-                nb = chunk_bytes[i] = tree_nbytes(chunk)
-            tr.emit("scatter", "cpu_dpu", ts, t1, workload=workload.name,
-                    req=i, chunk=gidx, bytes=nb)
+            if served:
+                nb = ent.nbytes // max(1, ent.expected_chunks)
+                tr.emit("scatter:cached", "cpu_dpu", ts, t1,
+                        workload=workload.name, req=i, chunk=gidx,
+                        bytes=nb, fingerprint=ent.fingerprint)
+            else:
+                if (nb := chunk_bytes.get(i)) is None:
+                    nb = chunk_bytes[i] = tree_nbytes(chunk)
+                tr.emit("scatter", "cpu_dpu", ts, t1, workload=workload.name,
+                        req=i, chunk=gidx, bytes=nb)
         return bufs
 
     def retire(entry):
@@ -289,7 +397,7 @@ def run_pipelined_ranked(grid, workload: ChunkedWorkload,
                          n_ranks: int | None = None,
                          plan: TunedPlan | None = None,
                          records: Sequence[RequestRecord] | None = None,
-                         _full: bool = False):
+                         cache=None, _full: bool = False):
     """Rank-parallel chunk pipelines over a RankGrid (DESIGN.md §10).
 
     Every request is split into ``n_ranks * n_chunks`` equal chunks sized
@@ -306,12 +414,11 @@ def run_pipelined_ranked(grid, workload: ChunkedWorkload,
     and (when tuned with a rank dimension) ``n_ranks``.
     """
     n_ranks = _resolve_ranks(grid, n_ranks, plan)
-    if plan is not None:
-        n_chunks = plan.n_chunks
+    n_chunks, use_cache = _effective_chunks(workload, n_chunks, plan, cache)
     if n_ranks <= 1:
         return run_pipelined_many(grid, workload, requests,
                                   n_chunks=n_chunks, plan=plan,
-                                  records=records, _full=_full)
+                                  records=records, cache=cache, _full=_full)
     if records is not None and plan is not None:
         for rec in records:
             rec.tuned = True
@@ -324,26 +431,47 @@ def run_pipelined_ranked(grid, workload: ChunkedWorkload,
     # constants to the devices at split time (GEMV's x, BS's array, ...) —
     # each rank needs those constants on its own banks
     metas = [[None] * n_req for _ in range(n_ranks)]
+    entries: list = [None] * n_req
     streams: list[list] = [[] for _ in range(n_ranks)]
     bucket = [[_Buckets() for _ in range(n_req)] for _ in range(n_ranks)]
     t_first = [[0.0] * n_req for _ in range(n_ranks)]
     t_retired = [[0.0] * n_req for _ in range(n_ranks)]
+    tr0 = get_tracer()
 
     t0 = time.perf_counter()
+    total = n_ranks * n_chunks
     for i, args in enumerate(requests):
         per = n_chunks
+        ts = time.perf_counter()
+        ent, hit = (cache.acquire(workload, args,
+                                  (grid.n_banks, n_ranks, total))
+                    if use_cache else (None, False))
+        entries[i] = ent
         for r in range(n_ranks):
-            metas[r][i], chunks = workload.split(
-                grid.rank_view(r), n_ranks * n_chunks, *args)
+            metas[r][i], chunks = _split_with_cache(
+                grid.rank_view(r), workload, args, total, ent, rank=r,
+                hit=hit)
             per = -(-len(chunks) // n_ranks)  # contiguous blocks, rank order
             streams[r].extend((i, g, chunks[g])
                               for g in range(r * per,
                                              min((r + 1) * per, len(chunks))))
+        if (ent is not None and hit and not ent.chunk_resident
+                and tr0.enabled):
+            # meta-resident hit: the skipped per-rank broadcasts happened
+            # at split time, so the cached span lands here (host track)
+            tr0.emit("scatter:cached", "cpu_dpu", ts, time.perf_counter(),
+                     track="host", workload=workload.name,
+                     req=_req_id(records, i), bytes=ent.nbytes,
+                     fingerprint=ent.fingerprint)
         if records is not None:
             # n_chunks is the per-pipeline depth (matches the flat path and
             # the plan's value); total chunks = n_chunks * n_ranks
             records[i].n_chunks = per
             records[i].n_ranks = n_ranks
+            records[i].cache_hit = hit
+            if (hit and plan is not None
+                    and getattr(plan, "warm_predicted_overlap", 0.0)):
+                records[i].predicted_overlap = plan.warm_predicted_overlap
 
     results: list = [None] * n_req
     rank_parts: list = [None] * n_ranks
@@ -358,7 +486,8 @@ def run_pipelined_ranked(grid, workload: ChunkedWorkload,
             with tr.track(f"rank-{r}"):
                 rank_parts[r] = _rank_worker(grid.rank_view(r), workload,
                                              metas[r], streams[r], bucket[r],
-                                             t_first[r], t_retired[r])
+                                             t_first[r], t_retired[r],
+                                             entries=entries)
         except BaseException as e:           # noqa: BLE001 — re-raised below
             errors[r] = e
 

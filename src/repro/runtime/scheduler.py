@@ -109,11 +109,15 @@ class PimScheduler:
                  max_batch_bytes: int = 256 << 20,
                  workloads: dict[str, common.ChunkedWorkload] | None = None,
                  plans: Mapping[str, TunedPlan] | None = None,
-                 telemetry: Telemetry | None = None):
+                 telemetry: Telemetry | None = None,
+                 cache=None):
         self.grid = grid
         self.n_chunks = n_chunks
         self.max_batch_requests = max_batch_requests
         self.max_batch_bytes = max_batch_bytes
+        #: resident-operand cache (runtime.resident, DESIGN.md §12); None
+        #: keeps the pre-residency scatter-every-request behavior
+        self.cache = cache
         #: per-workload TunedPlan overrides (chunk count + batch size) from
         #: runtime.autotune; workloads without a plan keep the constants
         #: above as the untuned fallback
@@ -262,7 +266,7 @@ class PimScheduler:
                 self.grid, self.workloads[batch[0].workload],
                 [r.args for r in batch], n_chunks=self.n_chunks,
                 plan=self.plans.get(batch[0].workload),
-                records=records)
+                records=records, cache=self.cache)
         except BaseException as e:                # noqa: BLE001 — forwarded
             if len(batch) == 1:
                 batch[0]._fulfill(error=e)

@@ -72,6 +72,7 @@ class RequestRecord:
     serialized_s: float = 0.0   # optional: measured pim() baseline time
     predicted_overlap: float = 0.0   # autotune plan's promise (0 = untuned)
     tuned: bool = False              # served under a TunedPlan?
+    cache_hit: bool = False          # resident operand served warm? (§12)
 
     @property
     def queue_wait(self) -> float:
@@ -122,7 +123,7 @@ class RequestRecord:
                 "inter_dpu_s": self.phases.inter_dpu,
                 "dpu_cpu_s": self.phases.dpu_cpu,
                 "overlap_speedup": self.overlap_speedup,
-                "tuned": self.tuned,
+                "tuned": self.tuned, "cache_hit": self.cache_hit,
                 "predicted_overlap": self.predicted_overlap,
                 "overlap_misprediction": self.overlap_misprediction,
                 "achieved_gbps": self.achieved_gbps}
@@ -181,6 +182,7 @@ class Telemetry:
     def _reset_running(self) -> None:
         self._n = 0
         self._tuned = 0
+        self._cache_hits = 0
         self._bytes_moved = 0
         self._sum_queue_wait = 0.0
         self._sum_latency = 0.0
@@ -203,6 +205,7 @@ class Telemetry:
             self.records.append(rec)
             self._n += 1
             self._tuned += rec.tuned
+            self._cache_hits += rec.cache_hit
             self._bytes_moved += rec.bytes_in + rec.bytes_out
             self._sum_queue_wait += rec.queue_wait
             self._sum_latency += lat
@@ -263,6 +266,7 @@ class Telemetry:
                 "mean_overlap_speedup": (self._sum_speedup / self._n_speedup
                                          if self._n_speedup else 0.0),
                 "tuned_requests": self._tuned,
+                "cache_hits": self._cache_hits,
                 "mean_overlap_misprediction": (
                     self._sum_mispred / self._n_mispred
                     if self._n_mispred else 0.0),
@@ -274,6 +278,19 @@ class Telemetry:
         out["percentiles"] = {
             name: pcts for name in ("latency_s", "queue_wait_s", "service_s")
             if (pcts := self.metrics.percentiles(name))}
+        return out
+
+    def stats(self) -> dict:
+        """The merged telemetry-plus-metrics view ``session.stats()``
+        serves: lifetime aggregates with the live counter snapshot and the
+        queue-depth histogram folded in.  One construction site — the
+        session façade (and anything else wanting the combined view) calls
+        this instead of re-implementing the merge."""
+        out = self.aggregate()
+        snap = self.metrics.snapshot()
+        out["counters"] = snap["counters"]
+        if "queue_depth" in snap["histograms"]:
+            out["queue_depth"] = snap["histograms"]["queue_depth"]
         return out
 
     def snapshot_records(self) -> list[RequestRecord]:

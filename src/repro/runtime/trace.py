@@ -33,6 +33,13 @@ installs a :class:`Tracer` as the active one, and
 ``session.trace_export(path)`` / close-time auto-export write the JSON.
 ``tools/trace_view.py`` renders top-N slowest spans and the per-stage
 critical-path / overlap-efficiency summary from the same file.
+
+Residency spans (DESIGN.md §12): a chunk served from the resident-operand
+cache emits ``scatter:cached`` (category ``cpu_dpu``, tagged with the
+entry's ``fingerprint`` and the bytes the skipped push would have moved)
+in place of the ``scatter`` span, so warm traffic is visually distinct on
+every pipeline track and ``tools/trace_view.py`` can report the cached-
+scatter savings.
 """
 from __future__ import annotations
 

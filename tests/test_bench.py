@@ -1,7 +1,8 @@
 """Bench artifact layer: tools/bench.py produces a schema-valid document
 that survives a JSON round trip, tools/check_bench.py validates schemas,
-the monotone weak-scaling invariant, the tracing-overhead gate, and
-regressions, and the committed BENCH_PR6.json baseline is valid."""
+the monotone weak-scaling invariant, the tracing-overhead gate, the
+residency (warm-vs-cold) gate, and regressions, and the committed
+BENCH_PR7.json baseline is valid."""
 import json
 import pathlib
 import sys
@@ -18,9 +19,10 @@ from bench import collect  # noqa: E402
 
 @pytest.fixture(scope="module")
 def doc(bank_grid):
-    """One small live bench run: a pipelineable + a serialized-only entry."""
-    return collect(grid=bank_grid, workloads=["VA", "NW"], n_requests=2,
-                   scale=1, smoke=True, pr_tag="test")
+    """One small live bench run: a pipelineable, a serialized-only, and a
+    resident-operand entry (GEMV feeds the residency section)."""
+    return collect(grid=bank_grid, workloads=["VA", "GEMV", "NW"],
+                   n_requests=2, scale=1, smoke=True, pr_tag="test")
 
 
 def test_collect_is_schema_valid(doc):
@@ -83,6 +85,38 @@ def test_validate_gates_tracing_overhead(doc):
     missing = json.loads(json.dumps(doc))
     del missing["observability"]
     assert any("observability" in e for e in check_bench.validate(missing))
+
+
+def test_collect_residency_section(doc):
+    res = doc["residency"]
+    assert res["workload"] == "GEMV"
+    assert res["warm_s"] <= res["cold_s"]           # the gated invariant
+    assert res["hits"] >= 1 and res["misses"] >= 1
+    assert 0 < res["hit_ratio"] < 1
+    assert res["warm_hit_reps"] == res["reps"]      # every warm rep hit
+    assert res["resident_bytes"] > 0 and res["evictions"] == 0
+    assert res["warm_scatter_s"] <= max(
+        check_bench.WARM_SCATTER_FRAC * res["cold_scatter_s"],
+        check_bench.WARM_SCATTER_FLOOR_S)
+
+
+def test_validate_gates_residency(doc):
+    bad = json.loads(json.dumps(doc))
+    bad["residency"]["warm_s"] = bad["residency"]["cold_s"] * 2
+    assert any("slower than cold" in e for e in check_bench.validate(bad))
+    bad = json.loads(json.dumps(doc))
+    bad["residency"]["warm_scatter_s"] = (
+        bad["residency"]["cold_scatter_s"] + 1.0)
+    assert any("warm_scatter_s" in e for e in check_bench.validate(bad))
+    bad = json.loads(json.dumps(doc))
+    bad["residency"]["hits"] = 0
+    assert any("residency.hits" in e for e in check_bench.validate(bad))
+    none = json.loads(json.dumps(doc))
+    none["residency"] = {"workload": None}   # nothing resident: valid
+    assert check_bench.validate(none) == []
+    missing = json.loads(json.dumps(doc))
+    del missing["residency"]
+    assert any("residency" in e for e in check_bench.validate(missing))
 
 
 def test_compare_identical_passes(doc):
@@ -250,8 +284,8 @@ def test_check_bench_cli(doc, tmp_path):
 # -- the committed baseline CI gates against ----------------------------------
 
 def test_committed_baseline_is_valid():
-    path = ROOT / "BENCH_PR6.json"
-    assert path.exists(), "BENCH_PR6.json baseline missing from repo root"
+    path = ROOT / "BENCH_PR7.json"
+    assert path.exists(), "BENCH_PR7.json baseline missing from repo root"
     base = json.loads(path.read_text())
     assert check_bench.validate(base) == []
     # generated at the CI bench-smoke shape: 8 simulated banks, full registry

@@ -231,6 +231,66 @@ def test_session_autotune_installs_plans(bank_grid):
     s.close()
 
 
+# -- operand residency through the façade (DESIGN.md §12) ---------------------
+
+def test_stats_reports_cache_counters(sess, rng):
+    entry = pim.registry()["GEMV"]
+    args = entry.make_args(rng, 1)
+    sess.run("GEMV", *args)
+    sess.run("GEMV", *args)
+    out = sess.stats()
+    cs = out["cache"]
+    assert (cs["hits"], cs["misses"], cs["entries"]) == (1, 1, 1)
+    assert cs["resident_bytes"] > 0 and cs["budget_bytes"] > 0
+    assert cs["evictions"] == 0
+    # the same counters mirror into the metrics registry (one merge site)
+    assert out["counters"]["cache_hits"] == 1
+    assert out["counters"]["cache_misses"] == 1
+    assert out["counters"]["cache_resident_bytes"] == cs["resident_bytes"]
+    assert out["cache_hits"] == 1            # telemetry aggregate side
+
+
+def test_resident_false_disables_cache(bank_grid, rng):
+    s = pim.PimSession(grid=bank_grid, resident=False)
+    entry = pim.registry()["GEMV"]
+    args = entry.make_args(rng, 1)
+    try:
+        assert s.cache is None
+        for _ in range(2):                   # every request re-scatters
+            entry.compare(s.run("GEMV", *args), entry.ref(*args))
+        assert "cache" not in s.stats()
+        with pytest.raises(RuntimeError, match="resident=False"):
+            s.pin("GEMV", *args)
+    finally:
+        s.close()
+
+
+def test_close_releases_resident_operands(bank_grid, rng):
+    entry = pim.registry()["GEMV"]
+    args = entry.make_args(rng, 1)
+    s = pim.PimSession(grid=bank_grid)
+    s.run("GEMV", *args)
+    assert len(s.cache) == 1 and s.cache.resident_bytes > 0
+    s.close()
+    assert len(s.cache) == 0 and s.cache.resident_bytes == 0
+
+
+def test_cache_spans_start_stop_cycles(bank_grid, rng):
+    """A start()/stop-to-deterministic cycle must not drop residents: the
+    cache belongs to the session lifetime, not the serving mode."""
+    entry = pim.registry()["GEMV"]
+    args = entry.make_args(rng, 1)
+    s = pim.PimSession(grid=bank_grid)
+    try:
+        s.run("GEMV", *args)                 # deterministic: fills
+        s.start()                            # serving: same cache serves
+        entry.compare(s.submit("GEMV", *args).result(timeout=300),
+                      entry.ref(*args))
+        assert s.cache.stats()["hits"] == 1
+    finally:
+        s.close()
+
+
 # -- registry-wide equivalence sweep ------------------------------------------
 
 def test_run_matches_ref_registry_wide(sess):

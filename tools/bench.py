@@ -32,7 +32,13 @@ measured tracing overhead (traced vs untraced best-of-reps — gated < 5% by
 ``check_bench.py``), span counts/tracks from the traced leg, and the
 p50/p90/p99 latency stats the upgraded ``session.stats()`` reports.
 
-    PYTHONPATH=src python tools/bench.py --smoke --banks 8 --out BENCH_PR6.json
+A ``residency`` object (DESIGN.md §12) measures the resident-operand cache:
+cold (cache cleared per rep) vs warm (operand resident) best-of-reps run
+time on the first resident workload, the cache hit ratio, and the scatter
+seconds the warm hits elided — ``check_bench.py`` gates warm <= cold and
+warm-hit scatter-seconds ~ 0.
+
+    PYTHONPATH=src python tools/bench.py --smoke --banks 8 --out BENCH_PR7.json
     PYTHONPATH=src python tools/bench.py roofline            # 4th subcommand
 """
 from __future__ import annotations
@@ -231,6 +237,78 @@ def _observability_section(grid, names, smoke: bool) -> dict:
     }
 
 
+def _residency_section(grid, names, smoke: bool) -> dict:
+    """The artifact's ``residency`` object (DESIGN.md §12): cold vs warm
+    ``run()`` time on the first resident workload (GEMV preferred — the
+    paper's canonical reuse case), the cache hit ratio, and the scatter
+    seconds per request on the best cold vs best warm rep.  Cold reps clear
+    the cache first (every rep re-scatters); warm reps run against a filled
+    cache (the fill is one extra run, not timed).  Both legs' outputs are
+    checked against ``ref`` so the timing can never come from a wrong
+    answer."""
+    import time
+
+    import numpy as np
+
+    from repro import pim
+
+    registry = pim.registry()
+    resident = [n for n in names if registry[n].resident]
+    wl = "GEMV" if "GEMV" in resident else (resident[0] if resident else None)
+    if wl is None:
+        return {"workload": None}     # nothing resident; validator skips
+    entry = registry[wl]
+    rng = np.random.default_rng(7)
+    args = entry.make_args(rng, 2 if smoke else 4)
+    ref_out = entry.ref(*args)
+
+    sess = pim.PimSession(grid=grid, trace=False)
+    reps = 3 if smoke else 5
+    sess.run(wl, *args)                  # compile warmup
+
+    def one_run():
+        sess.telemetry.reset()
+        t0 = time.perf_counter()
+        out = sess.run(wl, *args)
+        dt = time.perf_counter() - t0
+        return out, dt, sess.telemetry.snapshot_records()[-1]
+
+    cold_s, cold_scatter = float("inf"), 0.0
+    for _ in range(reps):
+        sess.cache.clear()
+        out, dt, rec = one_run()
+        if dt < cold_s:
+            cold_s, cold_scatter = dt, rec.phases.cpu_dpu
+    entry.compare(out, ref_out)
+
+    sess.cache.clear()
+    sess.run(wl, *args)                  # fill: the miss the warm reps hit on
+    warm_s, warm_scatter, warm_hits = float("inf"), 0.0, 0
+    for _ in range(reps):
+        out, dt, rec = one_run()
+        if dt < warm_s:
+            warm_s, warm_scatter = dt, rec.phases.cpu_dpu
+        warm_hits += rec.cache_hit
+    entry.compare(out, ref_out)
+    cs = sess.cache.stats()
+    sess.close()
+    return {
+        "workload": wl,
+        "reps": reps,
+        "cold_s": cold_s,
+        "warm_s": warm_s,
+        "warm_speedup": cold_s / warm_s if warm_s else 0.0,
+        "warm_hit_reps": warm_hits,
+        "cold_scatter_s": cold_scatter,
+        "warm_scatter_s": warm_scatter,
+        "hits": cs["hits"],
+        "misses": cs["misses"],
+        "hit_ratio": cs["hits"] / max(1, cs["hits"] + cs["misses"]),
+        "evictions": cs["evictions"],
+        "resident_bytes": cs["resident_bytes"],
+    }
+
+
 def collect(grid=None, workloads=None, *, n_requests: int = 6,
             scale: int = 2, smoke: bool = False,
             pr_tag: str | None = None) -> dict:
@@ -269,6 +347,7 @@ def collect(grid=None, workloads=None, *, n_requests: int = 6,
             (fig(fast=True) if fig is mb.fig4_arith_throughput else fig())],
         "scaling": _scaling_section(session, names, smoke),
         "observability": _observability_section(session.grid, names, smoke),
+        "residency": _residency_section(session.grid, names, smoke),
         # the fourth benchmark: rows ride along when dry-run records exist
         # ([] otherwise — the LM roofline needs repro.launch.dryrun output)
         "roofline": rl.rows(rl.load_records()),

@@ -97,6 +97,25 @@ def observability_table(obs: dict) -> list[str]:
     return lines
 
 
+def residency_table(res: dict) -> list[str]:
+    """Warm-vs-cold operand-cache measurement (schema repro-bench/4)."""
+    if not res or res.get("workload") is None:
+        return []
+    return [
+        "",
+        "#### Residency: warm (operand resident) vs cold",
+        "",
+        f"workload `{res['workload']}` · cold {res['cold_s'] * 1e3:.2f} ms "
+        f"→ warm {res['warm_s'] * 1e3:.2f} ms "
+        f"(×{res.get('warm_speedup', 0.0):.2f}) · scatter "
+        f"{res['cold_scatter_s'] * 1e3:.2f} ms → "
+        f"{res['warm_scatter_s'] * 1e3:.3f} ms · "
+        f"{res.get('hits', 0)} hits / {res.get('misses', 0)} misses · "
+        f"{res.get('resident_bytes', 0) / 1e6:.2f} MB resident "
+        "(gated warm ≤ cold, warm scatter ~0)",
+    ]
+
+
 def summarize(doc: dict) -> str:
     env, settings = doc["env"], doc["settings"]
     kind = "smoke" if settings.get("smoke") else "full"
@@ -119,6 +138,7 @@ def summarize(doc: dict) -> str:
             "Rank weak scaling (problem ∝ ranks; gated by check_bench.py)",
         ),
         *observability_table(doc.get("observability", {})),
+        *residency_table(doc.get("residency", {})),
     ]
     return "\n".join(lines) + "\n"
 

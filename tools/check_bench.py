@@ -27,12 +27,17 @@ Two layers:
   differences; ``--force-ratio`` overrides), and absolute timings only gate
   under ``--strict-timing`` (same-machine diffs).
 
-``validate`` also gates the ``observability`` object (schema repro-bench/3):
-the measured tracing overhead (traced vs untraced best-of-reps,
-DESIGN.md §11) must stay under :data:`OVERHEAD_GATE` — the runtime's
-"off by default, near-free when on" promise, checked on every artifact.
+``validate`` also gates the ``observability`` object: the measured tracing
+overhead (traced vs untraced best-of-reps, DESIGN.md §11) must stay under
+:data:`OVERHEAD_GATE` — the runtime's "off by default, near-free when on"
+promise, checked on every artifact.  Schema repro-bench/4 adds the
+``residency`` object (DESIGN.md §12), gated two ways: the warm
+(operand-resident) run must not be slower than the cold one, and the warm
+rep's scatter seconds must be ~0 (<= :data:`WARM_SCATTER_FRAC` of the cold
+rep's, or the absolute :data:`WARM_SCATTER_FLOOR_S` noise floor) — a warm
+hit that still pushes bytes means the cache stopped eliding transfers.
 
-    python tools/check_bench.py BENCH_PR6.json BENCH_ci.json [--threshold 0.25]
+    python tools/check_bench.py BENCH_PR7.json BENCH_ci.json [--threshold 0.25]
 """
 from __future__ import annotations
 
@@ -42,7 +47,7 @@ import math
 import pathlib
 import sys
 
-SCHEMA = "repro-bench/3"
+SCHEMA = "repro-bench/4"
 
 #: relative drop in overlap speedup (or rise in time, with --strict-timing)
 #: tolerated before the gate fails
@@ -61,6 +66,15 @@ PER_SPAN_GATE_US = 25.0
 #: tolerated relative drop in weak-scaling throughput between consecutive
 #: rank counts (the monotone weak-scaling invariant)
 WEAK_SCALING_TOLERANCE = 0.25
+
+#: warm-hit scatter seconds must stay under this fraction of the cold rep's
+#: (a warm hit serves cached bank buffers — it must not re-push the operand)
+WARM_SCATTER_FRAC = 0.10
+
+#: absolute noise floor for the warm-scatter gate: on smoke runs the cold
+#: scatter is itself small, so a few ms of host-side bookkeeping (lock +
+#: cache lookup, still counted in the cpu_dpu bucket) must not fail the gate
+WARM_SCATTER_FLOOR_S = 5e-3
 
 _TIE_EPS = 1e-9
 
@@ -173,6 +187,47 @@ def _check_observability(obs, errors: list[str]) -> None:
                           f"want finite > 0, got {pcts.get(p)!r}")
 
 
+def _check_residency(res, errors: list[str]) -> None:
+    """The ``residency`` object (DESIGN.md §12): warm (operand-resident)
+    run must not lose to cold, warm hits must have happened, and the warm
+    rep's scatter seconds must be ~0 — the cache's whole point is eliding
+    the repeated CPU→bank push (arXiv:2110.01709's transfer-cost
+    bottleneck)."""
+    where = "residency"
+    if res.get("workload") is None:
+        return      # no resident workload was available to measure
+    for key in ("cold_s", "warm_s"):
+        if not _finite_pos(res.get(key)):
+            errors.append(f"{where}.{key}: want finite > 0, "
+                          f"got {res.get(key)!r}")
+    for key in ("cold_scatter_s", "warm_scatter_s"):
+        v = res.get(key)
+        if not (isinstance(v, (int, float)) and math.isfinite(v) and v >= 0):
+            errors.append(f"{where}.{key}: want finite >= 0, got {v!r}")
+    if errors and any(e.startswith(where) for e in errors):
+        return
+    hits, misses = res.get("hits"), res.get("misses")
+    if not (isinstance(hits, int) and hits >= 1):
+        errors.append(f"{where}.hits: want int >= 1 (the warm reps must "
+                      f"actually hit), got {hits!r}")
+    if not (isinstance(misses, int) and misses >= 1):
+        errors.append(f"{where}.misses: want int >= 1 (the cold reps must "
+                      f"actually miss), got {misses!r}")
+    if res["warm_s"] > res["cold_s"] * (1.0 + _TIE_EPS):
+        errors.append(
+            f"{where}: warm run {res['warm_s']:.4f}s slower than cold "
+            f"{res['cold_s']:.4f}s — a resident operand must not cost more "
+            "than re-scattering it")
+    scatter_gate = max(WARM_SCATTER_FRAC * res["cold_scatter_s"],
+                       WARM_SCATTER_FLOOR_S)
+    if res["warm_scatter_s"] > scatter_gate:
+        errors.append(
+            f"{where}.warm_scatter_s: {res['warm_scatter_s']:.4f}s > "
+            f"{scatter_gate:.4f}s gate (cold scatter "
+            f"{res['cold_scatter_s']:.4f}s) — warm hits must elide the "
+            "operand push, not repeat it")
+
+
 def validate(doc) -> list[str]:
     """Structural schema check; returns a list of errors (empty = valid)."""
     errors: list[str] = []
@@ -181,12 +236,13 @@ def validate(doc) -> list[str]:
     if doc.get("schema") != SCHEMA:
         errors.append(f"schema: want {SCHEMA!r}, got {doc.get('schema')!r}")
     for key in ("env", "settings", "model", "workloads", "scaling",
-                "observability"):
+                "observability", "residency"):
         if not isinstance(doc.get(key), dict):
             errors.append(f"missing or non-object top-level key {key!r}")
     if errors:
         return errors
     _check_observability(doc["observability"], errors)
+    _check_residency(doc["residency"], errors)
 
     env = doc["env"]
     for key in ("python", "jax", "platform"):

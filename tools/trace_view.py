@@ -12,7 +12,12 @@ publishes into the job summary and what a quick local look needs:
   bottleneck stage's busy time.  A perfectly overlapped pipeline keeps its
   bottleneck stage busy end-to-end, so ``bottleneck_busy / wall`` is 1.0;
   the gap below 1.0 is pipeline bubble — the quantity the paper's stacked
-  bars can only show in aggregate (DESIGN.md §11).
+  bars can only show in aggregate (DESIGN.md §11);
+* **cached-scatter savings** — warm chunks served from the resident-operand
+  cache emit ``scatter:cached`` spans (DESIGN.md §12) instead of pushing
+  bytes; the summary counts them, sums the bytes the elided pushes would
+  have moved, and estimates the seconds saved from the mean duration of the
+  cold ``scatter`` spans in the same trace.
 
     PYTHONPATH=src python tools/trace_view.py trace.json [--top 10]
     python tools/trace_view.py trace.json --summary >> "$GITHUB_STEP_SUMMARY"
@@ -85,9 +90,30 @@ def stage_summary(spans) -> dict:
             "overlap_efficiency": min(1.0, busy / wall) if wall else 0.0}
 
 
+def residency_summary(spans) -> dict:
+    """Cached-scatter savings (DESIGN.md §12): how many chunk pushes the
+    resident-operand cache elided, the bytes those pushes would have moved,
+    and an estimate of the seconds saved — cached count × the mean duration
+    of the *cold* ``scatter`` spans in the same trace (the work a warm hit
+    replaces)."""
+    cached = [e for e in spans if e["name"] == "scatter:cached"]
+    cold = [e for e in spans if e["name"] == "scatter"]
+    cold_mean_s = (sum(e.get("dur", 0.0) for e in cold) / len(cold) / 1e6
+                   if cold else 0.0)
+    return {
+        "cached_spans": len(cached),
+        "cached_bytes": sum(e.get("args", {}).get("bytes", 0)
+                            for e in cached),
+        "cold_scatter_spans": len(cold),
+        "cold_scatter_mean_ms": cold_mean_s * 1e3,
+        "est_saved_s": len(cached) * cold_mean_s,
+    }
+
+
 def render(path, top: int = 10, markdown: bool = False) -> str:
     spans, tracks = split_events(load_events(path))
     summ = stage_summary(spans)
+    res = residency_summary(spans)
     lines: list[str] = []
     if markdown:
         lines += [f"### Runtime trace `{pathlib.Path(path).name}`", ""]
@@ -97,6 +123,12 @@ def render(path, top: int = 10, markdown: bool = False) -> str:
         f"{summ['bottleneck'] or '—'} "
         f"({summ['bottleneck_busy_s'] * 1e3:.1f} ms busy) · overlap "
         f"efficiency {summ['overlap_efficiency']:.0%}")
+    if res["cached_spans"]:
+        lines.append(
+            f"resident cache: {res['cached_spans']} scatter(s) elided · "
+            f"{res['cached_bytes'] / 1e6:.2f} MB not pushed · "
+            f"~{res['est_saved_s'] * 1e3:.1f} ms saved "
+            f"(mean cold scatter {res['cold_scatter_mean_ms']:.3f} ms)")
     lines.append("")
     if markdown:
         lines += ["| stage | spans | busy ms | mean ms |",
