@@ -6,6 +6,8 @@ The one stable surface for serving PrIM workloads: allocate banks with
 ``make_bank_grid`` + registry lookups + ``PimScheduler`` + ``TunedPlan``
 plumbing.  ``repro.runtime`` stays the documented internal layer underneath.
 """
+from repro.runtime.resident import ResidentHandle
+
 from .session import PimSession, registry, session
 
-__all__ = ["PimSession", "registry", "session"]
+__all__ = ["PimSession", "ResidentHandle", "registry", "session"]

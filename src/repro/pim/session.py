@@ -46,7 +46,7 @@ from repro.core.perfmodel import mram_capacity_bytes
 from repro.runtime.autotune import DEFAULT_N_CHUNKS, TuningResult
 from repro.runtime.pipeline import (_effective_chunks, _resolve_ranks,
                                     run_pipelined_ranked)
-from repro.runtime.resident import ResidentCache
+from repro.runtime.resident import ResidentCache, unwrap_handles
 from repro.runtime.scheduler import PimRequest, PimScheduler
 from repro.runtime.telemetry import Telemetry
 from repro.runtime.trace import NULL_SPAN, Tracer, set_tracer
@@ -396,6 +396,12 @@ class PimSession:
         exactly the placement the serving path will use (same chunk depth,
         same rank blocks), so the first real request is already warm.
         Returns the entry's fingerprint (pass it to :meth:`unpin`).
+
+        Warm requests still rehash the operand's bytes to find the entry
+        (content addressing); callers who guarantee immutability can skip
+        that recurring cost by passing the operand wrapped in a
+        :class:`~repro.runtime.resident.ResidentHandle` — here and in
+        ``run()``/``submit()``/``map()``.
         """
         self._check_open("pin")
         cache = self._sched.cache
@@ -417,22 +423,27 @@ class PimSession:
             raise RuntimeError(
                 f"{workload} operand does not fit the residency budget "
                 f"({cache.budget_bytes} bytes) even after eviction")
-        if not ent.ready:
-            res = tuple(args[j] for j in wl.resident_args)
-            for r in range(n_ranks):
-                view = (self._grid.rank_view(r) if n_ranks > 1
-                        else self._grid)
-                rm0, res_chunks = wl.split_resident(view, total, *res)
-                rm = ent.set_rank_meta(r, rm0,
-                                       n_chunks=len(res_chunks or ()))
-                if res_chunks is not None:
-                    per = -(-len(res_chunks) // n_ranks)
-                    for g in range(r * per,
-                                   min((r + 1) * per, len(res_chunks))):
-                        with ent.lock:
-                            if ent.get(g) is None:
-                                ent.store(g, wl.scatter(view, rm,
-                                                        res_chunks[g]))
+        try:
+            if not ent.ready:
+                res = tuple(unwrap_handles(args)[j]
+                            for j in wl.resident_args)
+                for r in range(n_ranks):
+                    view = (self._grid.rank_view(r) if n_ranks > 1
+                            else self._grid)
+                    rm0, res_chunks = wl.split_resident(view, total, *res)
+                    rm = ent.set_rank_meta(r, rm0,
+                                           n_chunks=len(res_chunks or ()))
+                    if res_chunks is not None:
+                        per = -(-len(res_chunks) // n_ranks)
+                        for g in range(r * per,
+                                       min((r + 1) * per, len(res_chunks))):
+                            with ent.lock:
+                                if ent.get(g) is None:
+                                    ent.store(g, wl.scatter(view, rm,
+                                                            res_chunks[g]))
+        finally:
+            cache.release(ent)           # drop the acquire() lease; the
+                                         # pin itself keeps it unevictable
         return ent.fingerprint
 
     def unpin(self, fingerprint: str) -> bool:

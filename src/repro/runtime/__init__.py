@@ -21,7 +21,8 @@ from .autotune import (StageFit, TunedPlan, TuningResult, WorkloadProfile,
 from .metrics import Histogram, Metrics, merge_snapshots
 from .pipeline import (PipelineResult, run_pipelined, run_pipelined_many,
                        run_pipelined_ranked)
-from .resident import ResidentCache, ResidentEntry, fingerprint
+from .resident import (ResidentCache, ResidentEntry, ResidentHandle,
+                       content_digest, fingerprint, unwrap_handles)
 from .scheduler import PimRequest, PimScheduler
 from .telemetry import RequestRecord, Telemetry
 from .trace import NULL_TRACER, Span, Tracer, get_tracer, set_tracer
@@ -29,7 +30,8 @@ from .trace import NULL_TRACER, Span, Tracer, get_tracer, set_tracer
 __all__ = ["PipelineResult", "run_pipelined", "run_pipelined_many",
            "run_pipelined_ranked",
            "PimRequest", "PimScheduler", "RequestRecord", "Telemetry",
-           "ResidentCache", "ResidentEntry", "fingerprint",
+           "ResidentCache", "ResidentEntry", "ResidentHandle",
+           "content_digest", "fingerprint", "unwrap_handles",
            "Histogram", "Metrics", "merge_snapshots",
            "NULL_TRACER", "Span", "Tracer", "get_tracer", "set_tracer",
            "StageFit", "TunedPlan", "TuningResult", "WorkloadProfile",

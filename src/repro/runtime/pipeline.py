@@ -40,6 +40,7 @@ import jax
 from repro.core.banked import BankGrid
 from repro.core.transfer import tree_nbytes
 
+from .resident import unwrap_handles
 from .telemetry import RequestRecord, _phases
 from .trace import get_tracer
 
@@ -93,6 +94,17 @@ def _effective_chunks(workload, n_chunks, plan, cache) -> tuple[int, bool]:
     return n_chunks, use_cache
 
 
+def _refill_chunk(view, workload, args, total, gidx):
+    """Recompute one resident chunk whose warm-hit ``None`` placeholder
+    outlived its entry (the cache was cleared/released mid-flight — the
+    in-flight lease makes eviction impossible, so this is a last-resort
+    self-heal, not a hot path): re-run the resident split and hand back
+    the real chunk so the request degrades to a plain scatter."""
+    res = tuple(unwrap_handles(args)[j] for j in workload.resident_args)
+    _, res_chunks = workload.split_resident(view, total, *res)
+    return res_chunks[gidx]
+
+
 def _split_with_cache(view, workload, args, total, ent, rank=0, hit=False):
     """Split one request against a resident entry (or plainly when
     ``ent`` is None).  Returns (meta, chunks) where chunks are ``None``
@@ -102,6 +114,7 @@ def _split_with_cache(view, workload, args, total, ent, rank=0, hit=False):
     filler of the same fingerprint, or a retry after a failed fill, must be
     able to push the buffers the entry is still missing; already-stored
     chunks are deduplicated under the entry lock at scatter time)."""
+    args = unwrap_handles(args)           # workloads never see the token
     if ent is None:
         return workload.split(view, total, *args)
     res = tuple(args[j] for j in workload.resident_args)
@@ -180,27 +193,6 @@ def run_pipelined_many(grid: BankGrid, workload: ChunkedWorkload,
         return records[i].request_id if records is not None else i
 
     t0 = time.perf_counter()
-    for i, args in enumerate(requests):
-        ts = time.perf_counter()
-        ent, hit = (cache.acquire(workload, args, (grid.n_banks, 1, n_chunks))
-                    if use_cache else (None, False))
-        entries[i] = ent
-        metas[i], chunks = _split_with_cache(grid, workload, args,
-                                             n_chunks, ent, hit=hit)
-        if ent is not None and hit and not ent.chunk_resident and tr.enabled:
-            # meta-resident hit (BS): the skipped broadcast happened at
-            # split time, so the cached span lands here, not per chunk
-            tr.emit("scatter:cached", "cpu_dpu", ts, time.perf_counter(),
-                    workload=workload.name, req=_rid(i),
-                    bytes=ent.nbytes, fingerprint=ent.fingerprint)
-        chunk_count[i] = len(chunks)
-        flat.extend((i, ci, c) for ci, c in enumerate(chunks))
-        if records is not None:
-            records[i].n_chunks = len(chunks)
-            records[i].cache_hit = hit
-            if (hit and plan is not None
-                    and getattr(plan, "warm_predicted_overlap", 0.0)):
-                records[i].predicted_overlap = plan.warm_predicted_overlap
 
     def scatter(k):
         i, ci, chunk = flat[k]
@@ -216,6 +208,9 @@ def run_pipelined_many(grid: BankGrid, workload: ChunkedWorkload,
             with ent.lock:
                 bufs = ent.get(ci)
                 if bufs is None:
+                    if chunk is None:    # placeholder outlived the entry
+                        chunk = _refill_chunk(grid, workload, requests[i],
+                                              n_chunks, ci)
                     bufs = workload.scatter(grid, metas[i], chunk)
                     ent.store(ci, bufs)
                 else:
@@ -253,24 +248,55 @@ def run_pipelined_many(grid: BankGrid, workload: ChunkedWorkload,
                         workload=workload.name, req=_rid(i),
                         chunks=chunk_count[i])
 
-    in_flight: list = []
-    bufs = scatter(0) if flat else None
-    for k in range(len(flat)):
-        i, ci, _ = flat[k]
-        ts = time.perf_counter()
-        outs = workload.compute(grid, metas[i], bufs)
-        t1 = bucket[i].add("dpu", ts)
-        if tr.enabled:
-            tr.emit("compute", "dpu", ts, t1, workload=workload.name,
-                    req=_rid(i), chunk=ci)
-        if k + 1 < len(flat):
-            bufs = scatter(k + 1)        # overlaps compute of chunk k
-        _host_prefetch(outs)             # start draining chunk k early
-        in_flight.append((i, ci, outs))
-        if len(in_flight) > 1:           # retire k-1 while k computes
+    try:
+        for i, args in enumerate(requests):
+            ts = time.perf_counter()
+            ent, hit = (cache.acquire(workload, args,
+                                      (grid.n_banks, 1, n_chunks))
+                        if use_cache else (None, False))
+            entries[i] = ent
+            metas[i], chunks = _split_with_cache(grid, workload, args,
+                                                 n_chunks, ent, hit=hit)
+            if (ent is not None and hit and not ent.chunk_resident
+                    and tr.enabled):
+                # meta-resident hit (BS): the skipped broadcast happened at
+                # split time, so the cached span lands here, not per chunk
+                tr.emit("scatter:cached", "cpu_dpu", ts, time.perf_counter(),
+                        workload=workload.name, req=_rid(i),
+                        bytes=ent.nbytes, fingerprint=ent.fingerprint)
+            chunk_count[i] = len(chunks)
+            flat.extend((i, ci, c) for ci, c in enumerate(chunks))
+            if records is not None:
+                records[i].n_chunks = len(chunks)
+                records[i].cache_hit = hit
+                if (hit and plan is not None
+                        and getattr(plan, "warm_predicted_overlap", 0.0)):
+                    records[i].predicted_overlap = plan.warm_predicted_overlap
+
+        in_flight: list = []
+        bufs = scatter(0) if flat else None
+        for k in range(len(flat)):
+            i, ci, _ = flat[k]
+            ts = time.perf_counter()
+            outs = workload.compute(grid, metas[i], bufs)
+            t1 = bucket[i].add("dpu", ts)
+            if tr.enabled:
+                tr.emit("compute", "dpu", ts, t1, workload=workload.name,
+                        req=_rid(i), chunk=ci)
+            if k + 1 < len(flat):
+                bufs = scatter(k + 1)    # overlaps compute of chunk k
+            _host_prefetch(outs)         # start draining chunk k early
+            in_flight.append((i, ci, outs))
+            if len(in_flight) > 1:       # retire k-1 while k computes
+                retire(in_flight.pop(0))
+        while in_flight:
             retire(in_flight.pop(0))
-    while in_flight:
-        retire(in_flight.pop(0))
+    finally:
+        # retire every acquire() lease — including on error paths, or the
+        # entries would be unevictable forever
+        if use_cache:
+            for ent in entries:
+                cache.release(ent)
 
     makespans = [t_done[i] - (t_start[i] or t0) for i in range(n_req)]
     if records is not None:
@@ -309,7 +335,7 @@ def _resolve_ranks(grid, n_ranks, plan) -> int:
 
 
 def _rank_worker(view, workload, metas, stream, bucket, t_start, t_retired,
-                 entries=None):
+                 entries=None, requests=None, split_total=0):
     """One rank's double-buffered pipeline over its assigned chunk stream.
 
     ``stream`` is an ordered list of (req_idx, global_chunk_idx, chunk);
@@ -341,6 +367,10 @@ def _rank_worker(view, workload, metas, stream, bucket, t_start, t_retired,
             with ent.lock:
                 bufs = ent.get(gidx)
                 if bufs is None:
+                    if chunk is None and requests is not None:
+                        # placeholder outlived the entry (see _refill_chunk)
+                        chunk = _refill_chunk(view, workload, requests[i],
+                                              split_total, gidx)
                     bufs = workload.scatter(view, metas[i], chunk)
                     ent.store(gidx, bufs)
                 else:
@@ -440,39 +470,6 @@ def run_pipelined_ranked(grid, workload: ChunkedWorkload,
 
     t0 = time.perf_counter()
     total = n_ranks * n_chunks
-    for i, args in enumerate(requests):
-        per = n_chunks
-        ts = time.perf_counter()
-        ent, hit = (cache.acquire(workload, args,
-                                  (grid.n_banks, n_ranks, total))
-                    if use_cache else (None, False))
-        entries[i] = ent
-        for r in range(n_ranks):
-            metas[r][i], chunks = _split_with_cache(
-                grid.rank_view(r), workload, args, total, ent, rank=r,
-                hit=hit)
-            per = -(-len(chunks) // n_ranks)  # contiguous blocks, rank order
-            streams[r].extend((i, g, chunks[g])
-                              for g in range(r * per,
-                                             min((r + 1) * per, len(chunks))))
-        if (ent is not None and hit and not ent.chunk_resident
-                and tr0.enabled):
-            # meta-resident hit: the skipped per-rank broadcasts happened
-            # at split time, so the cached span lands here (host track)
-            tr0.emit("scatter:cached", "cpu_dpu", ts, time.perf_counter(),
-                     track="host", workload=workload.name,
-                     req=_req_id(records, i), bytes=ent.nbytes,
-                     fingerprint=ent.fingerprint)
-        if records is not None:
-            # n_chunks is the per-pipeline depth (matches the flat path and
-            # the plan's value); total chunks = n_chunks * n_ranks
-            records[i].n_chunks = per
-            records[i].n_ranks = n_ranks
-            records[i].cache_hit = hit
-            if (hit and plan is not None
-                    and getattr(plan, "warm_predicted_overlap", 0.0)):
-                records[i].predicted_overlap = plan.warm_predicted_overlap
-
     results: list = [None] * n_req
     rank_parts: list = [None] * n_ranks
     errors: list = [None] * n_ranks
@@ -487,21 +484,64 @@ def run_pipelined_ranked(grid, workload: ChunkedWorkload,
                 rank_parts[r] = _rank_worker(grid.rank_view(r), workload,
                                              metas[r], streams[r], bucket[r],
                                              t_first[r], t_retired[r],
-                                             entries=entries)
+                                             entries=entries,
+                                             requests=requests,
+                                             split_total=total)
         except BaseException as e:           # noqa: BLE001 — re-raised below
             errors[r] = e
 
-    threads = [threading.Thread(target=worker, args=(r,),
-                                name=f"pim-rank-{r}", daemon=True)
-               for r in range(1, n_ranks)]
-    for t in threads:
-        t.start()
-    worker(0)                                # rank 0 runs on this thread
-    for t in threads:
-        t.join()
-    for e in errors:
-        if e is not None:
-            raise e
+    try:
+        for i, args in enumerate(requests):
+            per = n_chunks
+            ts = time.perf_counter()
+            ent, hit = (cache.acquire(workload, args,
+                                      (grid.n_banks, n_ranks, total))
+                        if use_cache else (None, False))
+            entries[i] = ent
+            for r in range(n_ranks):
+                metas[r][i], chunks = _split_with_cache(
+                    grid.rank_view(r), workload, args, total, ent, rank=r,
+                    hit=hit)
+                per = -(-len(chunks) // n_ranks)  # contiguous rank blocks
+                streams[r].extend(
+                    (i, g, chunks[g])
+                    for g in range(r * per,
+                                   min((r + 1) * per, len(chunks))))
+            if (ent is not None and hit and not ent.chunk_resident
+                    and tr0.enabled):
+                # meta-resident hit: the skipped per-rank broadcasts happened
+                # at split time, so the cached span lands here (host track)
+                tr0.emit("scatter:cached", "cpu_dpu", ts,
+                         time.perf_counter(), track="host",
+                         workload=workload.name, req=_req_id(records, i),
+                         bytes=ent.nbytes, fingerprint=ent.fingerprint)
+            if records is not None:
+                # n_chunks is the per-pipeline depth (matches the flat path
+                # and the plan's value); total chunks = n_chunks * n_ranks
+                records[i].n_chunks = per
+                records[i].n_ranks = n_ranks
+                records[i].cache_hit = hit
+                if (hit and plan is not None
+                        and getattr(plan, "warm_predicted_overlap", 0.0)):
+                    records[i].predicted_overlap = plan.warm_predicted_overlap
+
+        threads = [threading.Thread(target=worker, args=(r,),
+                                    name=f"pim-rank-{r}", daemon=True)
+                   for r in range(1, n_ranks)]
+        for t in threads:
+            t.start()
+        worker(0)                            # rank 0 runs on this thread
+        for t in threads:
+            t.join()
+        for e in errors:
+            if e is not None:
+                raise e
+    finally:
+        # retire every acquire() lease — including on error paths, or the
+        # entries would be unevictable forever
+        if use_cache:
+            for ent in entries:
+                cache.release(ent)
 
     makespans = [0.0] * n_req
     phases = []

@@ -21,12 +21,20 @@ Key pieces:
   capacity model (:func:`repro.core.perfmodel.mram_capacity_bytes`),
   with pinning as the eviction escape hatch and hit/miss/eviction/
   resident-bytes counters mirrored into :class:`~repro.runtime.metrics.Metrics`.
+  ``acquire()`` additionally takes an in-flight *lease* on the entry it
+  returns; leased entries are never eviction victims, so a warm hit handed
+  to a request stays resident until that request retires
+  (:meth:`ResidentCache.release`) — a later request's reservation cannot
+  pull the buffers out from under a batchmate's ``[None]`` chunk
+  placeholders.
 
 Caller-owned mutation caveat: the fingerprint hashes the operand's bytes
 *at acquire time*.  Re-submitting a mutated host array therefore misses
 (new fingerprint) and re-scatters — stale reads are impossible — but the
 cost is a full rehash of the operand per request; hashing is the price of
-content addressing.
+content addressing.  Callers who guarantee immutability can opt out of
+the recurring rehash by wrapping the operand in a :class:`ResidentHandle`
+(its precomputed digest stands in for the O(bytes) hash).
 """
 from __future__ import annotations
 
@@ -46,23 +54,70 @@ if TYPE_CHECKING:  # annotation-only: avoid importing the workload suite
     from .metrics import Metrics
 
 
-def fingerprint(workload: str, payload, placement: tuple) -> str:
-    """Content fingerprint of a resident operand in a placement.
-
-    Hashes the workload name, the placement spec (``(n_banks, n_ranks,
-    total_chunks)``) and, for every array leaf of ``payload``, its dtype,
-    shape and raw bytes.  Two host arrays with equal contents fingerprint
-    identically; any byte, dtype, shape or placement difference yields a
-    new key.
-    """
+def content_digest(value) -> str:
+    """sha1 over every array leaf of ``value``: dtype + shape + logical
+    bytes.  The placement-independent half of :func:`fingerprint`."""
     h = hashlib.sha1()
-    h.update(workload.encode())
-    h.update(repr(tuple(placement)).encode())
-    for leaf in jax.tree_util.tree_leaves(payload):
+    for leaf in jax.tree_util.tree_leaves(value):
         a = np.asarray(leaf)
         h.update(a.dtype.str.encode())
         h.update(repr(a.shape).encode())
         h.update(memoryview(np.ascontiguousarray(a)).cast("B"))
+    return h.hexdigest()
+
+
+class ResidentHandle:
+    """Opt-in identity token: a resident operand plus its content digest,
+    hashed once at construction.
+
+    :func:`fingerprint` rehashes the operand's bytes on every
+    ``acquire()`` — the price of content addressing (mutation ⇒ miss,
+    never a stale hit).  A caller who guarantees the array is immutable
+    while in use wraps it once (``h = ResidentHandle(A)``) and passes the
+    handle in the operand's position of a residency-capable workload's
+    ``run()``/``submit()``/``map()``/``pin()`` args: the cached digest
+    stands in for the O(bytes) rehash, so warm requests cost O(1) host
+    work.  The handle fingerprints identically to the raw array it wraps
+    (same cache entry either way).  Mutating the wrapped array afterwards
+    is caller-owned breakage — the stale digest would serve stale
+    resident data.
+    """
+
+    __slots__ = ("value", "digest")
+
+    def __init__(self, value):
+        self.value = value
+        self.digest = content_digest(value)
+
+    def __repr__(self) -> str:
+        return f"ResidentHandle({self.digest[:12]})"
+
+
+def unwrap_handles(args: tuple) -> tuple:
+    """Replace top-level :class:`ResidentHandle` wrappers in an argument
+    tuple with the arrays they wrap (workloads never see the token)."""
+    return tuple(a.value if isinstance(a, ResidentHandle) else a
+                 for a in args)
+
+
+def fingerprint(workload: str, payload, placement: tuple) -> str:
+    """Content fingerprint of a resident operand in a placement.
+
+    Hashes the workload name, the placement spec (``(n_banks, n_ranks,
+    total_chunks)``) and each payload item's :func:`content_digest`
+    (dtype + shape + raw bytes over its array leaves; a
+    :class:`ResidentHandle` contributes its precomputed digest instead of
+    rehashing).  Two host arrays with equal contents fingerprint
+    identically — wrapped or not; any byte, dtype, shape or placement
+    difference yields a new key.
+    """
+    h = hashlib.sha1()
+    h.update(workload.encode())
+    h.update(repr(tuple(placement)).encode())
+    for item in payload:
+        d = (item.digest if isinstance(item, ResidentHandle)
+             else content_digest(item))
+        h.update(d.encode())
     return h.hexdigest()
 
 
@@ -90,6 +145,9 @@ class ResidentEntry:
         self.nbytes = nbytes
         self.placement = placement        # (n_banks, n_ranks, total_chunks)
         self.pinned = pinned
+        self.leases = 0                   # in-flight acquire() holds; guarded
+                                          # by the *cache* lock, not self.lock
+        self.released = False             # evicted/cleared: entry is dead
         self.lock = threading.RLock()
         self.ready = False
         # chunk_resident=False ⇒ the operand lives entirely in the rank
@@ -106,6 +164,8 @@ class ResidentEntry:
         (``n_chunks``; 0 for meta-only residency).  Returns the
         authoritative meta."""
         with self.lock:
+            if self.released:             # dead entry: caller runs standalone
+                return meta
             if rank not in self._metas:
                 self._metas[rank] = meta
                 self.expected_chunks = n_chunks
@@ -119,9 +179,10 @@ class ResidentEntry:
 
     def store(self, gidx: int, bufs) -> None:
         with self.lock:
-            if gidx not in self._bufs:
-                self._bufs[gidx] = bufs
-                self._maybe_ready()
+            if self.released or gidx in self._bufs:
+                return
+            self._bufs[gidx] = bufs
+            self._maybe_ready()
 
     def get(self, gidx: int):
         with self.lock:
@@ -133,8 +194,12 @@ class ResidentEntry:
             self.ready = True
 
     def release(self) -> None:
-        """Drop device references (eviction / cache clear)."""
+        """Drop device references (eviction / cache clear).  A released
+        entry is dead: fillers' ``store``/``set_rank_meta`` become no-ops,
+        so a concurrent fill cannot resurrect buffers the cache no longer
+        accounts for."""
         with self.lock:
+            self.released = True
             self._metas.clear()
             self._bufs.clear()
             self.ready = False
@@ -147,8 +212,14 @@ class ResidentCache:
     (:func:`repro.core.perfmodel.mram_capacity_bytes`).  ``acquire``
     either returns a ready entry (hit), an entry being filled (miss —
     caller scatters into it), or ``None`` when the operand cannot be
-    made resident (over budget even after evicting every unpinned
-    entry).  Pinned entries are never evicted.
+    made resident (over budget even after evicting every unpinned,
+    unleased entry).  Pinned entries are never evicted; neither are
+    *leased* entries — ``acquire`` takes an in-flight lease on every
+    entry it returns, and the caller drops it with :meth:`release` once
+    the request retires, so eviction can never strip buffers a live
+    request's warm-hit placeholders still stand for.  A reservation that
+    cannot fit within the unpinned, unleased bytes returns ``(None,
+    False)`` without evicting anything.
     """
 
     def __init__(self, budget_bytes: int, metrics: "Metrics | None" = None):
@@ -196,14 +267,19 @@ class ResidentCache:
         * ``(entry, True)`` — ready entry, serve warm.
         * ``(entry, False)`` — entry reserved/being filled, caller fills.
         * ``(None, False)`` — not cacheable under the budget.
+
+        A returned entry carries one in-flight lease; pair every
+        non-``None`` return with a :meth:`release` when the request
+        retires.
         """
         payload = tuple(args[i] for i in workload.resident_args)
         fp = fingerprint(workload.name, payload, placement)
-        nbytes = tree_nbytes(payload)
+        nbytes = tree_nbytes(unwrap_handles(payload))
         with self._lock:
             ent = self._entries.get(fp)
             if ent is not None:
                 self._entries.move_to_end(fp)
+                ent.leases += 1           # in-flight: not an eviction victim
                 if pin:
                     ent.pinned = True
                 if ent.ready:
@@ -213,30 +289,43 @@ class ResidentCache:
                 self.misses += 1
                 self._inc("misses")
                 return ent, False
-            # reserve: evict LRU unpinned entries until the operand fits
-            if nbytes > self.budget_bytes:
-                self.misses += 1
-                self._inc("misses")
-                return None, False
-            resident = sum(e.nbytes for e in self._entries.values())
-            while resident + nbytes > self.budget_bytes:
-                victim = next((k for k, e in self._entries.items()
-                               if not e.pinned), None)
-                if victim is None:        # everything pinned: not cacheable
-                    self.misses += 1
-                    self._inc("misses")
-                    return None, False
-                resident -= self._entries[victim].nbytes
-                self._entries.pop(victim).release()
-                self.evictions += 1
-                self._inc("evictions")
-            ent = ResidentEntry(fp, workload.name, nbytes, placement,
-                                pinned=pin)
-            self._entries[fp] = ent
             self.misses += 1
             self._inc("misses")
+            if nbytes > self.budget_bytes:
+                return None, False
+            resident = sum(e.nbytes for e in self._entries.values())
+            if resident + nbytes > self.budget_bytes:
+                # fit check before touching anything: when the unpinned,
+                # unleased entries cannot cover the shortfall, evicting any
+                # of them is pure loss — report uncacheable with the cache
+                # intact (and the resident-bytes gauge still truthful)
+                evictable = sum(e.nbytes for e in self._entries.values()
+                                if not e.pinned and not e.leases)
+                if resident - evictable + nbytes > self.budget_bytes:
+                    return None, False
+                while resident + nbytes > self.budget_bytes:
+                    victim = next(k for k, e in self._entries.items()
+                                  if not e.pinned and not e.leases)
+                    resident -= self._entries[victim].nbytes
+                    self._entries.pop(victim).release()
+                    self.evictions += 1
+                    self._inc("evictions")
+            ent = ResidentEntry(fp, workload.name, nbytes, placement,
+                                pinned=pin)
+            ent.leases = 1
+            self._entries[fp] = ent
             self._set_gauge()
             return ent, False
+
+    def release(self, entry: "ResidentEntry | None") -> None:
+        """Return one :meth:`acquire` lease (``None``-safe, so callers can
+        release unconditionally).  Once every in-flight request holding an
+        entry has retired it becomes an eviction candidate again."""
+        if entry is None:
+            return
+        with self._lock:
+            if entry.leases > 0:
+                entry.leases -= 1
 
     def lookup(self, fp: str) -> ResidentEntry | None:
         with self._lock:

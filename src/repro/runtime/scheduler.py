@@ -51,6 +51,7 @@ from repro.core.banked import BankGrid
 from repro.core.transfer import tree_nbytes as _nbytes
 
 from .pipeline import run_pipelined_ranked
+from .resident import unwrap_handles
 from .telemetry import RequestRecord, Telemetry, now
 from .trace import get_tracer
 
@@ -157,8 +158,9 @@ class PimScheduler:
         """Stamp a new request's lifecycle record (id, sizing, submit time).
         The single construction site for every path that feeds telemetry —
         ``submit()`` here and the session façade's streamed ``map()``."""
+        sized = unwrap_handles(args)      # size the arrays, not the tokens
         return RequestRecord(request_id=next(self._seq), workload=workload,
-                             n_items=_nitems(args), bytes_in=_nbytes(args),
+                             n_items=_nitems(sized), bytes_in=_nbytes(sized),
                              priority=priority, t_submit=now(),
                              n_banks=self.grid.n_banks)
 

@@ -29,7 +29,8 @@ import numpy as np
 import pytest
 
 from repro import pim
-from repro.runtime import ResidentCache, fingerprint
+from repro.runtime import (Metrics, ResidentCache, ResidentHandle,
+                           fingerprint)
 from repro.runtime.trace import NULL_TRACER, set_tracer
 
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -109,14 +110,18 @@ def test_cache_lru_eviction_order_and_counters():
     # mark ready without device work: meta-only, no chunk buffers expected
     e0.set_rank_meta(0, {}, n_chunks=0)
     assert e0.ready and not e0.chunk_resident
+    cache.release(e0)                    # request retires: lease back
     e1, _ = cache.acquire(wl, (mats[1], x), place)
     e1.set_rank_meta(0, {}, n_chunks=0)
+    cache.release(e1)
     assert cache.resident_bytes == 512 and len(cache) == 2
 
-    _, hit = cache.acquire(wl, (mats[0], x), place)     # hit, moves to MRU
+    eh, hit = cache.acquire(wl, (mats[0], x), place)    # hit, moves to MRU
     assert hit
+    cache.release(eh)
     e2, hit = cache.acquire(wl, (mats[2], x), place)    # evicts LRU = mats[1]
     assert not hit and e2 is not None
+    cache.release(e2)
     assert cache.lookup(fps[1]) is None and cache.lookup(fps[0]) is not None
     st = cache.stats()
     assert (st["hits"], st["misses"], st["evictions"]) == (1, 3, 1)
@@ -137,6 +142,104 @@ def test_cache_lru_eviction_order_and_counters():
 
     cache.clear()
     assert len(cache) == 0 and cache.resident_bytes == 0
+
+
+# -- in-flight leases / eviction safety ---------------------------------------
+
+def test_acquire_leases_block_eviction_until_release():
+    wl = pim.registry()["GEMV"].chunked
+    x = np.ones(4, np.float32)
+    m0 = np.zeros((16, 4), np.float32)                   # 256 B
+    m1 = np.ones((32, 4), np.float32)                    # 512 B
+    cache = ResidentCache(budget_bytes=512)
+    e0, hit = cache.acquire(wl, (m0, x), (1, 1, 2))
+    assert not hit and e0.leases == 1
+    e0b, _ = cache.acquire(wl, (m0, x), (1, 1, 2))       # same fingerprint
+    assert e0b is e0 and e0.leases == 2
+    # e0 leased: a reservation that would need its bytes is uncacheable,
+    # and nothing is destroyed in the attempt
+    ent, _ = cache.acquire(wl, (m1, x), (1, 1, 2))
+    assert ent is None and len(cache) == 1
+    assert cache.stats()["evictions"] == 0 and not e0.released
+    cache.release(e0)
+    assert e0.leases == 1
+    cache.release(e0)
+    cache.release(None)                                  # None-safe
+    assert e0.leases == 0
+    e1, _ = cache.acquire(wl, (m1, x), (1, 1, 2))        # now evicts e0
+    assert e1 is not None and cache.stats()["evictions"] == 1
+    assert len(cache) == 1 and e0.released
+    cache.release(e1)
+
+
+def test_failed_reservation_evicts_nothing_and_keeps_gauge():
+    """REVIEW regression: when the unpinned entries cannot cover the
+    shortfall, acquire() used to evict them anyway before giving up —
+    destroying entries for an operand that ends up uncacheable, and
+    leaving the resident-bytes gauge stale."""
+    wl = pim.registry()["GEMV"].chunked
+    x = np.ones(4, np.float32)
+    m = Metrics()
+    cache = ResidentCache(budget_bytes=512, metrics=m)
+    e0, _ = cache.acquire(wl, (np.zeros((16, 4), np.float32), x), (1, 1, 2))
+    e1, _ = cache.acquire(wl, (np.ones((16, 4), np.float32), x), (1, 1, 2),
+                          pin=True)
+    cache.release(e0)
+    cache.release(e1)
+    assert m.snapshot()["counters"]["cache_resident_bytes"] == 512
+    # the 512 B operand needs both entries' bytes but e1 is pinned: must
+    # reject up front with the cache (and gauge) untouched
+    ent, _ = cache.acquire(wl, (np.ones((32, 4), np.float32), x), (1, 1, 2))
+    assert ent is None
+    assert len(cache) == 2 and cache.resident_bytes == 512
+    assert cache.stats()["evictions"] == 0
+    assert m.snapshot()["counters"]["cache_resident_bytes"] == 512
+
+
+def test_store_into_released_entry_is_noop():
+    """An evicted/cleared entry is dead: an in-progress filler must not
+    resurrect buffers the cache no longer accounts for."""
+    wl = pim.registry()["GEMV"].chunked
+    x = np.ones(4, np.float32)
+    cache = ResidentCache(budget_bytes=1 << 20)
+    ent, _ = cache.acquire(wl, (np.zeros((16, 4), np.float32), x), (1, 1, 2))
+    ent.set_rank_meta(0, {"m": 1}, n_chunks=1)
+    cache.clear()                        # releases the entry mid-"fill"
+    assert ent.released
+    ent.store(0, object())               # orphan filler keeps scattering
+    assert ent.get(0) is None and not ent.ready
+    assert ent.set_rank_meta(0, {"m": 2}, n_chunks=1) == {"m": 2}
+    assert ent.rank_meta(0) is None
+
+
+def test_inflight_warm_hit_survives_batch_eviction_pressure(bank_grid):
+    """REVIEW regression (high): in a batched map() every request
+    acquires its entry up-front, before any scatter runs.  A later
+    request's reservation must not evict an earlier request's warm-hit
+    entry — its chunk list is ``[None]`` placeholders whose buffers live
+    in that entry, and the old code crashed scattering the placeholder."""
+    entry, (A1, x) = _gemv_args(seed=10)
+    A2 = np.random.default_rng(11).normal(size=A1.shape).astype(np.float32)
+    A3 = np.random.default_rng(12).normal(size=A1.shape).astype(np.float32)
+    s = pim.PimSession(grid=bank_grid, resident=GEMV_NBYTES + 1024)
+    try:
+        s.run("GEMV", A1, x)             # A1 resident + ready
+        outs = s.map("GEMV", [(A1, x), (A2, x), (A3, x)])
+        for A, out in zip((A1, A2, A3), outs):
+            entry.compare(out, entry.ref(A, x))
+        cs = s.stats()["cache"]
+        recs = list(s.telemetry.records)
+        # leases retired with the batch: A1's entry is evictable again
+        entry.compare(s.run("GEMV", A2, x), entry.ref(A2, x))
+        cs_after = s.stats()["cache"]
+    finally:
+        s.close()
+    assert cs["hits"] == 1               # A1 served warm inside the batch
+    assert cs["evictions"] == 0          # the leased entry was untouchable
+    assert cs["entries"] == 1 and cs["resident_bytes"] == GEMV_NBYTES
+    assert cs["misses"] == 3             # cold A1 + uncacheable A2, A3
+    assert recs[1].cache_hit and not recs[2].cache_hit
+    assert cs_after["evictions"] == 1    # A2 displaced the unleased A1
 
 
 # -- warm-hit equivalence (in-process, every resident workload) ---------------
@@ -244,6 +347,38 @@ def test_host_mutation_changes_fingerprint_and_misses(bank_grid):
     finally:
         s.close()
     assert cs["hits"] == 0 and cs["misses"] == 2 and cs["entries"] == 2
+
+
+# -- ResidentHandle: opt-in identity token ------------------------------------
+
+def test_resident_handle_skips_rehash_and_shares_the_entry(bank_grid,
+                                                           monkeypatch):
+    from repro.runtime import resident as res_mod
+    entry, (A, x) = _gemv_args(seed=13)
+    h = pim.ResidentHandle(A)
+    place = (bank_grid.n_banks, 1, 4)
+    # the handle fingerprints identically to the raw array it wraps
+    assert fingerprint("GEMV", (h,), place) == fingerprint("GEMV", (A,),
+                                                           place)
+    # ... without rehashing the bytes (content_digest must not be called)
+    def boom(_value):
+        raise AssertionError("content rehash on the handle fast path")
+    monkeypatch.setattr(res_mod, "content_digest", boom)
+    fingerprint("GEMV", (h,), place)
+    monkeypatch.undo()
+
+    ref_out = entry.ref(A, x)
+    s = pim.PimSession(grid=bank_grid)
+    try:
+        entry.compare(s.run("GEMV", h, x), ref_out)      # cold, via handle
+        entry.compare(s.run("GEMV", h, x), ref_out)      # warm, no rehash
+        entry.compare(s.run("GEMV", A, x), ref_out)      # raw arg: same entry
+        cs = s.stats()["cache"]
+        rec0 = s.telemetry.records[0]
+    finally:
+        s.close()
+    assert (cs["hits"], cs["misses"], cs["entries"]) == (2, 1, 1)
+    assert rec0.bytes_in == A.nbytes + x.nbytes          # sizing unwraps
 
 
 # -- concurrency --------------------------------------------------------------
