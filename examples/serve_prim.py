@@ -4,8 +4,9 @@ One ``pim.session(autotune=True)`` handle owns the banks: at open it
 calibrates the backend and installs per-workload tuned plans (DESIGN.md §8 —
 no hand-picked chunk counts anywhere in this file), entering the ``with``
 block starts the worker thread, and producers ``submit()`` a mixed stream of
-requests drawn from the FULL workload registry with priorities while earlier
-requests are still in flight.  The runtime batches same-workload requests,
+requests drawn from the FULL workload registry — carrying per-request
+``RequestOptions`` (tenant + priority, DESIGN.md §13) across two tenants
+with a 2:1 fair-share weight — while earlier requests are still in flight.  The runtime batches same-workload requests,
 pipelines their chunks (scatter k+1 overlapping compute k), and falls back
 to the serialized ``pim()`` for the registry's serialized-only workloads
 (NW, BFS — see their registry reasons).  Every result is checked against the
@@ -29,7 +30,7 @@ def main(autotune: bool = True):
     rng = np.random.default_rng(0)
     entries = list(pim.registry().values())
     tune = {"reps": 2} if autotune else False
-    with pim.session(autotune=tune) as s:
+    with pim.session(autotune=tune, tenants={"gold": 2.0, "free": 1.0}) as s:
         print(f"serving the full {len(entries)}-workload registry on "
               f"{s.n_banks} bank(s) "
               f"({sum(e.pipelineable for e in entries)} pipelined, "
@@ -40,7 +41,9 @@ def main(autotune: bool = True):
             for _ in range(2):                   # bursts of 2 same-workload
                 args = entry.make_args(rng, scale=1)
                 gold = entry.ref(*args)
-                req = s.submit(entry.name, *args, priority=i % 3)
+                opts = pim.RequestOptions(tenant=("gold", "free")[i % 2],
+                                          priority=i % 3)
+                req = s.submit(entry.name, *args, options=opts)
                 inflight.append((req, gold, entry))
         for req, gold, entry in inflight:
             entry.compare(req.result(timeout=600), gold)
@@ -52,6 +55,11 @@ def main(autotune: bool = True):
           f"({agg['tuned_requests']} served under a tuned plan)")
     print(f"mean queue wait {agg['mean_queue_wait_s'] * 1e3:.1f} ms, "
           f"mean latency {agg['mean_latency_s'] * 1e3:.1f} ms")
+    for name in ("gold", "free"):        # per-tenant rows (DESIGN.md §13)
+        t = agg["tenants"][name]
+        print(f"  tenant {name}: {t['completed']} served at weight "
+              f"{t['weight']:g}, mean latency "
+              f"{t['mean_latency_s'] * 1e3:.1f} ms")
     by_batch: dict = {}
     for r in s.telemetry.records:
         by_batch.setdefault(r.batch_id, []).append(r)

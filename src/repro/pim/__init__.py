@@ -5,9 +5,16 @@ The one stable surface for serving PrIM workloads: allocate banks with
 ``telemetry``/``plans``, release with ``close()`` — without hand-assembling
 ``make_bank_grid`` + registry lookups + ``PimScheduler`` + ``TunedPlan``
 plumbing.  ``repro.runtime`` stays the documented internal layer underneath.
+
+The multi-tenant QoS surface (DESIGN.md §13) is re-exported here:
+:class:`RequestOptions` rides on ``run``/``submit``/``map``, and
+:class:`QueueFull` / :class:`DeadlineExpired` are the shed / expired
+outcomes a request's ``result()`` can raise.
 """
+from repro.runtime.qos import DeadlineExpired, QueueFull, RequestOptions
 from repro.runtime.resident import ResidentHandle
 
 from .session import PimSession, registry, session
 
-__all__ = ["PimSession", "ResidentHandle", "registry", "session"]
+__all__ = ["DeadlineExpired", "PimSession", "QueueFull", "RequestOptions",
+           "ResidentHandle", "registry", "session"]

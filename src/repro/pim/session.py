@@ -12,11 +12,20 @@ never hand-assemble ``make_bank_grid()`` + ``REGISTRY[name]`` +
     from repro import pim
 
     with pim.session(banks=8, autotune=True) as s:   # dpu_alloc
-        req = s.submit("GEMV", A, x, priority=1)     # async launch -> future
+        req = s.submit("GEMV", A, x,                 # async launch -> future
+                       options=pim.RequestOptions(priority=1))
         y1 = s.run("VA", a, b)                       # sync launch
         ys = s.map("RED", [(x1,), (x2,), (x3,)])     # streamed batch
         y2 = req.result()
     # session closed: banks released, submit() now raises   # dpu_free
+
+Multi-tenant serving (DESIGN.md §13): ``pim.session(tenants={"gold": 2,
+"free": 1}, max_queue_depth=64, shed="reject")`` opens the QoS tier —
+requests carry a :class:`~repro.runtime.qos.RequestOptions` (tenant /
+priority / deadline_s / weight), tenants share the banks under
+weighted-fair dispatch with EDF ordering inside each queue, and beyond
+``max_queue_depth`` submits are shed (:class:`QueueFull`) or block.  The
+legacy ``priority=`` int still works behind a DeprecationWarning.
 
 The UPMEM verb mapping is tabulated in DESIGN.md §9.  Two execution modes,
 mirroring the scheduler underneath:
@@ -46,6 +55,7 @@ from repro.core.perfmodel import mram_capacity_bytes
 from repro.runtime.autotune import DEFAULT_N_CHUNKS, TuningResult
 from repro.runtime.pipeline import (_effective_chunks, _resolve_ranks,
                                     run_pipelined_ranked)
+from repro.runtime.qos import RequestOptions
 from repro.runtime.resident import ResidentCache, unwrap_handles
 from repro.runtime.scheduler import PimRequest, PimScheduler
 from repro.runtime.telemetry import Telemetry
@@ -108,7 +118,11 @@ class PimSession:
                  max_batch_bytes: int = 256 << 20,
                  telemetry: Telemetry | None = None,
                  trace: bool | str | None = None,
-                 resident: bool | int | ResidentCache = True):
+                 resident: bool | int | ResidentCache = True,
+                 tenants: Mapping[str, float] | Iterable[str] | None = None,
+                 max_queue_depth: int | None = None,
+                 shed: str | bool = "reject",
+                 policy: str = "qos"):
         if grid is not None and (banks is not None or ranks is not None
                                  or banks_per_rank is not None):
             raise ValueError("pass either grid= or a banks/ranks shape, "
@@ -149,7 +163,8 @@ class PimSession:
             self._grid, n_chunks=n_chunks,
             max_batch_requests=max_batch_requests,
             max_batch_bytes=max_batch_bytes, plans=plans,
-            telemetry=telemetry, cache=cache)
+            telemetry=telemetry, cache=cache, tenants=tenants,
+            max_queue_depth=max_queue_depth, shed=shed, policy=policy)
         # tracing (DESIGN.md §11): off by default; ``trace=True`` records
         # spans for explicit trace_export(), a path (or the REPRO_TRACE env
         # var when trace is None) also auto-exports at close().  The session
@@ -252,8 +267,18 @@ class PimSession:
         """Aggregate telemetry + live metrics (DESIGN.md §11): requests/sec,
         mean/min/max latency, p50/p90/p99 percentiles, per-stage seconds,
         per-workload breakdown, raw counters, residency-cache counters
-        (``cache``), and — when tracing — span counts."""
+        (``cache``), per-tenant rows (``tenants`` — completion-side
+        counts from telemetry merged with the scheduler's live queue-side
+        weight/queued/vtime, DESIGN.md §13), and — when tracing — span
+        counts."""
         out = self.telemetry.stats()      # merged telemetry + metrics view
+        tenants = dict(out.get("tenants") or {})
+        for name, live in self._sched.tenants().items():
+            row = dict(tenants.get(name) or {})
+            row.update(live)
+            tenants[name] = row
+        if tenants:
+            out["tenants"] = tenants
         if self.cache is not None:
             out["cache"] = self.cache.stats()
         if self._tracer is not None:
@@ -294,14 +319,22 @@ class PimSession:
 
     # -- launch verbs ---------------------------------------------------------
 
-    def submit(self, workload: str, *args, priority: int = 0) -> PimRequest:
+    def submit(self, workload: str, *args,
+               options: RequestOptions | None = None,
+               priority: int | None = None) -> PimRequest:
         """Asynchronous launch: enqueue one invocation, return its future.
         In serving mode the worker thread picks it up; in deterministic mode
-        it waits for the next :meth:`drain` / :meth:`run`."""
+        it waits for the next :meth:`drain` / :meth:`run`.  QoS (tenant /
+        priority / deadline / weight, DESIGN.md §13) comes in via
+        ``options=``; the legacy ``priority=`` int still works behind a
+        DeprecationWarning."""
         self._check_open("submit")
-        return self._sched.submit(workload, *args, priority=priority)
+        return self._sched.submit(workload, *args, options=options,
+                                  priority=priority)
 
-    def run(self, workload: str, *args, priority: int = 0,
+    def run(self, workload: str, *args,
+            options: RequestOptions | None = None,
+            priority: int | None = None,
             timeout: float | None = None) -> Any:
         """Synchronous launch (``dpu_launch`` + ``dpu_sync``): run one
         invocation to completion and return its result.  Pipelined vs
@@ -312,13 +345,15 @@ class PimSession:
         with (tr.span(f"run:{workload}", "session", track="session",
                       workload=workload) if tr is not None
               else NULL_SPAN):
-            req = self._sched.submit(workload, *args, priority=priority)
+            req = self._sched.submit(workload, *args, options=options,
+                                     priority=priority)
             if self._serving:
                 return req.result(timeout=timeout)
             self._sched.drain()
             return req.result(timeout=0)
 
-    def map(self, workload: str, arg_stream: Iterable[tuple]) -> list:
+    def map(self, workload: str, arg_stream: Iterable[tuple], *,
+            options: RequestOptions | None = None) -> list:
         """Streamed batch: run many same-workload invocations back-to-back.
 
         In deterministic mode pipelineable workloads stream *all* their
@@ -336,17 +371,20 @@ class PimSession:
         with (tr.span(f"map:{workload}", "session", track="session",
                       workload=workload, requests=len(args_list))
               if tr is not None else NULL_SPAN):
-            return self._map(workload, args_list)
+            return self._map(workload, args_list, options)
 
-    def _map(self, workload: str, args_list: list) -> list:
+    def _map(self, workload: str, args_list: list,
+             options: RequestOptions | None = None) -> list:
         if self._serving or workload not in self._sched.workloads:
             # serving (worker thread owns dispatch) or serialized-only /
             # unknown: the scheduler path handles all three
-            reqs = [self.submit(workload, *a) for a in args_list]
+            reqs = [self.submit(workload, *a, options=options)
+                    for a in args_list]
             if not self._serving:
                 self._sched.drain()
             return [r.result() for r in reqs]
-        records = [self._sched.make_record(workload, a) for a in args_list]
+        records = [self._sched.make_record(workload, a, options)
+                   for a in args_list]
         results = run_pipelined_ranked(
             self._grid, self._sched.workloads[workload], args_list,
             n_chunks=self._sched.n_chunks,

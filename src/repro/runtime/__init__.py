@@ -1,35 +1,42 @@
 """repro.runtime — the pipelined PIM-serving runtime (internal layer).
 
 The public names here are the PIM-serving set the `repro.pim` session
-façade (DESIGN.md §9) is built on: the chunk pipeline, the scheduler, the
-telemetry sink, and the autotuner.  Prefer ``repro.pim`` as the entry
-point; reach for these directly when the façade is too coarse
-(DESIGN.md §5 and §8 document the layer).
+façade (DESIGN.md §9) is built on: the chunk pipeline, the multi-tenant
+scheduler and its QoS surface, the telemetry sink, and the autotuner.
+Prefer ``repro.pim`` as the entry point; reach for these directly when the
+façade is too coarse (DESIGN.md §5 and §8 document the layer).
 
-The train-side fault-tolerance utilities live in their own submodules —
-``repro.runtime.elastic`` (mesh re-carve / reshard) and
-``repro.runtime.straggler`` (step monitor / watchdog); import them from
-there.  The old flat re-exports (``repro.runtime.carve_mesh`` etc.) keep
-working behind a DeprecationWarning shim.
+``elastic`` and ``straggler`` graduated from deprecated train-side
+utilities to live serving-tier dependencies in the serving PR
+(DESIGN.md §13): the scheduler drives :class:`RankAllocator` for elastic
+rank placement and :class:`StepMonitor` for straggler-aware capping, so
+their names are first-class exports again — no shim, no warning.
 """
-import importlib
-import warnings
-
 from .autotune import (StageFit, TunedPlan, TuningResult, WorkloadProfile,
                        autotune, calibrate, plan_for, probe_plan,
                        probe_ranks, rank_candidates)
+from .elastic import (RankAllocator, carve_mesh, reshard, shardings_for,
+                      simulate_failure)
 from .metrics import Histogram, Metrics, merge_snapshots
 from .pipeline import (PipelineResult, run_pipelined, run_pipelined_many,
                        run_pipelined_ranked)
+from .qos import (DEFAULT_TENANT, DeadlineExpired, QueueFull, RequestOptions,
+                  resolve_options)
 from .resident import (ResidentCache, ResidentEntry, ResidentHandle,
                        content_digest, fingerprint, unwrap_handles)
 from .scheduler import PimRequest, PimScheduler
+from .straggler import StepMonitor, StragglerConfig, Watchdog
 from .telemetry import RequestRecord, Telemetry
 from .trace import NULL_TRACER, Span, Tracer, get_tracer, set_tracer
 
 __all__ = ["PipelineResult", "run_pipelined", "run_pipelined_many",
            "run_pipelined_ranked",
            "PimRequest", "PimScheduler", "RequestRecord", "Telemetry",
+           "DEFAULT_TENANT", "DeadlineExpired", "QueueFull",
+           "RequestOptions", "resolve_options",
+           "RankAllocator", "carve_mesh", "reshard", "shardings_for",
+           "simulate_failure",
+           "StepMonitor", "StragglerConfig", "Watchdog",
            "ResidentCache", "ResidentEntry", "ResidentHandle",
            "content_digest", "fingerprint", "unwrap_handles",
            "Histogram", "Metrics", "merge_snapshots",
@@ -37,21 +44,3 @@ __all__ = ["PipelineResult", "run_pipelined", "run_pipelined_many",
            "StageFit", "TunedPlan", "TuningResult", "WorkloadProfile",
            "autotune", "calibrate", "plan_for", "probe_plan",
            "probe_ranks", "rank_candidates"]
-
-#: train-side names that moved behind their submodules (PR 4): old flat
-#: imports still resolve, with a DeprecationWarning pointing at the new home.
-_MOVED = {name: "elastic" for name in
-          ("carve_mesh", "reshard", "shardings_for", "simulate_failure")}
-_MOVED.update({name: "straggler" for name in
-               ("StepMonitor", "StragglerConfig", "Watchdog")})
-
-
-def __getattr__(name):
-    if name in _MOVED:
-        mod = _MOVED[name]
-        warnings.warn(
-            f"repro.runtime.{name} moved to repro.runtime.{mod}; "
-            "import it from there (the flat re-export will be removed)",
-            DeprecationWarning, stacklevel=2)
-        return getattr(importlib.import_module(f".{mod}", __name__), name)
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -319,13 +319,15 @@ def _req_id(records, i: int) -> int:
     return records[i].request_id if records is not None else i
 
 def _resolve_ranks(grid, n_ranks, plan) -> int:
-    """Effective rank count: the plan's measured pick (a probed plan is
-    authoritative even when it adopted 1 — flat measured best), else the
-    caller's, else every rank the grid has — always clamped to the
-    hardware."""
+    """Effective rank count.  An explicit caller ``n_ranks`` wins — that is
+    how the scheduler's elastic allocator (DESIGN.md §13) and the
+    autotuner's rank probes override placement per batch.  Otherwise the
+    plan's measured pick applies (a probed plan is authoritative even when
+    it adopted 1 — flat measured best), else every rank the grid has —
+    always clamped to the hardware."""
     have = getattr(grid, "n_ranks", 1)
     want = n_ranks
-    if plan is not None:
+    if want is None and plan is not None:
         probed = bool(getattr(plan, "rank_measured_s", None))
         if probed or getattr(plan, "n_ranks", 1) > 1:
             want = plan.n_ranks

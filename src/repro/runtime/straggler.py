@@ -1,9 +1,18 @@
-"""Straggler/health monitoring for the training loop.
+"""Straggler/health monitoring — shared by the training loop and the
+serving tier.
 
-SPMD steps are lockstep, so a straggling host slows every step — the signal
-is the *step-time distribution*, not per-device timing.  The monitor keeps a
-rolling median and flags steps that exceed ``threshold ×`` median; policy
-hooks escalate: log → early checkpoint → request re-carve (runtime/elastic).
+The signal is the *step-time distribution*, not per-device timing: the
+monitor keeps a rolling median and flags steps that exceed ``threshold ×``
+median, with a policy callback to escalate.  Two consumers:
+
+* **training** — SPMD steps are lockstep, so a straggling host slows every
+  step; escalation is log → early checkpoint → request re-carve
+  (``runtime/elastic.carve_mesh``).
+* **serving (DESIGN.md §13)** — the multi-tenant scheduler wraps each
+  dispatched batch in a per-workload :class:`StepMonitor`; a flagged batch
+  trips :meth:`~repro.runtime.elastic.RankAllocator.on_straggle`, shrinking
+  the rank slice the next batches fan out over until healthy batches relax
+  it back (straggler-aware re-dispatch).
 
 Also includes a watchdog that detects a *hung* step (no completion within a
 deadline) — the failure mode where one host loses its accelerator and the

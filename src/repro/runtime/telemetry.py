@@ -21,6 +21,21 @@ truncated) record window.  A lock guards the scheduler worker thread's
 record feeds the :class:`~repro.runtime.metrics.Metrics` registry
 (latency / queue-wait / service histograms, per-stage second counters) so
 ``session.stats()`` can report p50/p90/p99 alongside the means.
+
+Consistency contract for concurrent submitters (DESIGN.md §13): the
+metrics registry is fed *inside* the telemetry lock, and ``stats()`` /
+``aggregate()`` take their counter snapshot and percentiles under that
+same lock — so a ``stats()`` racing ``record()`` can never observe a
+request counted in the totals but missing from the per-workload /
+per-tenant breakdowns (or vice versa).  Lock order is always telemetry →
+metrics; nothing acquires them the other way around.
+
+Multi-tenant outcomes (DESIGN.md §13): every record carries its tenant,
+``aggregate()`` reports a per-tenant breakdown, and the scheduler's
+non-completion outcomes — requests **shed** by backpressure and requests
+whose deadline **expired** before dispatch — are folded in via
+:meth:`Telemetry.count_outcome` so goodput, shed rate, and miss counts
+come from one consistent surface.
 """
 from __future__ import annotations
 
@@ -61,6 +76,8 @@ class RequestRecord:
     bytes_in: int = 0
     bytes_out: int = 0
     priority: int = 0
+    tenant: str = "default"     # QoS queue the request ran under (§13)
+    deadline_s: float = 0.0     # 0 = none; relative to t_submit
     n_chunks: int = 1
     n_ranks: int = 1            # ranks the chunks were sharded across
     n_banks: int = 0            # grid size at submit time (row() uses it)
@@ -114,7 +131,7 @@ class RequestRecord:
         record time (callers no longer need to thread the grid size)."""
         return {"request": self.request_id, "workload": self.workload,
                 "banks": self.n_banks if n_banks is None else n_banks,
-                "items": self.n_items,
+                "items": self.n_items, "tenant": self.tenant,
                 "priority": self.priority, "chunks": self.n_chunks,
                 "ranks": self.n_ranks, "batch": self.batch_id,
                 "queue_wait_s": self.queue_wait,
@@ -161,6 +178,36 @@ class _WorkloadStats:
                 "bytes_moved": self.bytes_moved}
 
 
+class _TenantStats:
+    """Running per-tenant aggregate (DESIGN.md §13): completions plus the
+    scheduler's counted non-completion outcomes (shed / expired)."""
+
+    __slots__ = ("completed", "shed", "expired", "sum_latency",
+                 "sum_service", "bytes_moved")
+
+    def __init__(self):
+        self.completed = 0
+        self.shed = 0
+        self.expired = 0
+        self.sum_latency = 0.0
+        self.sum_service = 0.0
+        self.bytes_moved = 0
+
+    def add(self, rec: RequestRecord) -> None:
+        self.completed += 1
+        self.sum_latency += rec.latency_s
+        self.sum_service += rec.service_s
+        self.bytes_moved += rec.bytes_in + rec.bytes_out
+
+    def row(self) -> dict:
+        n = max(1, self.completed)
+        return {"completed": self.completed, "shed": self.shed,
+                "expired": self.expired,
+                "mean_latency_s": self.sum_latency / n,
+                "service_s": self.sum_service,
+                "bytes_moved": self.bytes_moved}
+
+
 class Telemetry:
     """Aggregate sink the scheduler writes completed records into.
 
@@ -196,10 +243,16 @@ class Telemetry:
         self._n_mispred = 0
         self._stage_s = dict.fromkeys(_STAGE_KEYS, 0.0)
         self._by_workload: dict[str, _WorkloadStats] = {}
+        self._by_tenant: dict[str, _TenantStats] = {}
+        self._shed = 0
+        self._expired = 0
 
     def record(self, rec: RequestRecord) -> None:
         """Fold one completed record in (scheduler worker thread calls this
-        while readers snapshot — everything mutates under the lock)."""
+        while readers snapshot — everything mutates under the lock).  The
+        metrics feed happens *inside* the lock so a concurrent ``stats()``
+        sees counters and breakdowns move together (lock order telemetry →
+        metrics; the metrics lock is never held across a telemetry call)."""
         lat = rec.latency_s
         with self._lock:
             self.records.append(rec)
@@ -223,14 +276,33 @@ class Telemetry:
                 self._stage_s[key] += getattr(rec.phases, key)
             self._by_workload.setdefault(
                 rec.workload, _WorkloadStats()).add(rec)
-        m = self.metrics
-        m.inc("requests")
-        m.inc("bytes_moved", rec.bytes_in + rec.bytes_out)
-        m.observe("latency_s", lat)
-        m.observe("queue_wait_s", rec.queue_wait)
-        m.observe("service_s", rec.service_s)
-        for key in _STAGE_KEYS:
-            m.inc(f"{key}_s", getattr(rec.phases, key))
+            self._by_tenant.setdefault(
+                rec.tenant, _TenantStats()).add(rec)
+            m = self.metrics
+            m.inc("requests")
+            m.inc("bytes_moved", rec.bytes_in + rec.bytes_out)
+            m.observe("latency_s", lat)
+            m.observe("queue_wait_s", rec.queue_wait)
+            m.observe("service_s", rec.service_s)
+            for key in _STAGE_KEYS:
+                m.inc(f"{key}_s", getattr(rec.phases, key))
+
+    def count_outcome(self, tenant: str, outcome: str) -> None:
+        """Count a non-completion outcome (DESIGN.md §13): ``"shed"`` —
+        refused/evicted by backpressure — or ``"expired"`` — deadline
+        passed before dispatch.  Folded under the same lock as the record
+        counters so shed/expired totals never drift from the per-tenant
+        rows a concurrent ``stats()`` reports."""
+        if outcome not in ("shed", "expired"):
+            raise ValueError(f"unknown outcome {outcome!r}")
+        with self._lock:
+            ts = self._by_tenant.setdefault(tenant, _TenantStats())
+            setattr(ts, outcome, getattr(ts, outcome) + 1)
+            if outcome == "shed":
+                self._shed += 1
+            else:
+                self._expired += 1
+            self.metrics.inc(outcome)
 
     def __len__(self) -> int:
         return self._n
@@ -241,53 +313,67 @@ class Telemetry:
         with self._lock:
             self.records.clear()
             self._reset_running()
-        self.metrics.reset()
+            self.metrics.reset()
+
+    def _aggregate_locked(self) -> dict:
+        """The aggregate view, caller holds ``self._lock``.  Percentiles
+        come from the metrics registry *inside* the telemetry lock so they
+        cannot run ahead of the counters they are reported next to."""
+        if not self._n and not self._shed and not self._expired:
+            return {"requests": 0}
+        n = self._n
+        wall = max(self._t_last_finish - self._t_first_submit, 1e-12)
+        out = {
+            "requests": n,
+            "wall_s": wall,
+            "requests_per_s": n / wall,
+            "mean_queue_wait_s": self._sum_queue_wait / max(1, n),
+            "mean_latency_s": self._sum_latency / max(1, n),
+            "min_latency_s": self._min_latency,
+            "max_latency_s": self._max_latency,
+            "bytes_moved": self._bytes_moved,
+            "aggregate_gbps": self._bytes_moved / wall / 1e9,
+            "mean_overlap_speedup": (self._sum_speedup / self._n_speedup
+                                     if self._n_speedup else 0.0),
+            "tuned_requests": self._tuned,
+            "cache_hits": self._cache_hits,
+            "shed": self._shed,
+            "expired": self._expired,
+            "mean_overlap_misprediction": (
+                self._sum_mispred / self._n_mispred
+                if self._n_mispred else 0.0),
+            "stage_seconds": {f"{k}_s": v
+                              for k, v in self._stage_s.items()},
+            "workloads": {name: ws.row()
+                          for name, ws in self._by_workload.items()},
+            "tenants": {name: ts.row()
+                        for name, ts in self._by_tenant.items()},
+        }
+        out["percentiles"] = {
+            name: pcts for name in ("latency_s", "queue_wait_s", "service_s")
+            if (pcts := self.metrics.percentiles(name))}
+        return out
 
     def aggregate(self) -> dict:
         """Lifetime aggregates from the running counters (exact even after
         the ring buffer evicted old records), including latency extremes,
         p50/p90/p99 percentiles, per-stage second totals, and one breakdown
-        row per workload."""
+        row per workload and per tenant."""
         with self._lock:
-            if not self._n:
-                return {"requests": 0}
-            n = self._n
-            wall = max(self._t_last_finish - self._t_first_submit, 1e-12)
-            out = {
-                "requests": n,
-                "wall_s": wall,
-                "requests_per_s": n / wall,
-                "mean_queue_wait_s": self._sum_queue_wait / n,
-                "mean_latency_s": self._sum_latency / n,
-                "min_latency_s": self._min_latency,
-                "max_latency_s": self._max_latency,
-                "bytes_moved": self._bytes_moved,
-                "aggregate_gbps": self._bytes_moved / wall / 1e9,
-                "mean_overlap_speedup": (self._sum_speedup / self._n_speedup
-                                         if self._n_speedup else 0.0),
-                "tuned_requests": self._tuned,
-                "cache_hits": self._cache_hits,
-                "mean_overlap_misprediction": (
-                    self._sum_mispred / self._n_mispred
-                    if self._n_mispred else 0.0),
-                "stage_seconds": {f"{k}_s": v
-                                  for k, v in self._stage_s.items()},
-                "workloads": {name: ws.row()
-                              for name, ws in self._by_workload.items()},
-            }
-        out["percentiles"] = {
-            name: pcts for name in ("latency_s", "queue_wait_s", "service_s")
-            if (pcts := self.metrics.percentiles(name))}
-        return out
+            return self._aggregate_locked()
 
     def stats(self) -> dict:
         """The merged telemetry-plus-metrics view ``session.stats()``
         serves: lifetime aggregates with the live counter snapshot and the
         queue-depth histogram folded in.  One construction site — the
         session façade (and anything else wanting the combined view) calls
-        this instead of re-implementing the merge."""
-        out = self.aggregate()
-        snap = self.metrics.snapshot()
+        this instead of re-implementing the merge.  The whole view is built
+        under the telemetry lock, so a snapshot taken mid-``record()``
+        cannot report counters that disagree with the breakdowns
+        (DESIGN.md §13)."""
+        with self._lock:
+            out = self._aggregate_locked()
+            snap = self.metrics.snapshot()
         out["counters"] = snap["counters"]
         if "queue_depth" in snap["histograms"]:
             out["queue_depth"] = snap["histograms"]["queue_depth"]

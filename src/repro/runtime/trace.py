@@ -219,13 +219,15 @@ class Tracer:
 
     def _track_order(self) -> list[str]:
         """Deterministic track → tid layout: host, scheduler, session first,
-        then rank-* numerically, then anything else alphabetically."""
+        then rank-* numerically, then tenant-* lanes (one per tenant,
+        DESIGN.md §13), then anything else alphabetically."""
         seen = {s.track for s in self.spans}
         head = [t for t in ("host", "scheduler", "session") if t in seen]
         ranks = sorted((t for t in seen if t.startswith("rank-")),
                        key=lambda t: (len(t), t))
-        rest = sorted(seen - set(head) - set(ranks))
-        return head + ranks + rest
+        tenants = sorted(t for t in seen if t.startswith("tenant-"))
+        rest = sorted(seen - set(head) - set(ranks) - set(tenants))
+        return head + ranks + tenants + rest
 
     def to_events(self) -> list[dict]:
         """Chrome ``trace_event`` list: thread-name metadata per track plus

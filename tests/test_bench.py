@@ -1,8 +1,8 @@
 """Bench artifact layer: tools/bench.py produces a schema-valid document
 that survives a JSON round trip, tools/check_bench.py validates schemas,
 the monotone weak-scaling invariant, the tracing-overhead gate, the
-residency (warm-vs-cold) gate, and regressions, and the committed
-BENCH_PR7.json baseline is valid."""
+residency (warm-vs-cold) gate, the serving (fairness + shed) gate, and
+regressions, and the committed BENCH_PR8.json baseline is valid."""
 import json
 import pathlib
 import sys
@@ -117,6 +117,62 @@ def test_validate_gates_residency(doc):
     missing = json.loads(json.dumps(doc))
     del missing["residency"]
     assert any("residency" in e for e in check_bench.validate(missing))
+
+
+def test_collect_serving_section(doc):
+    srv = doc["serving"]
+    fair = srv["fairness"]
+    assert fair["expected_ratio"] == pytest.approx(2.0)
+    assert fair["shed"] == 0            # unbounded leg: nothing refused
+    assert fair["window_total"] >= 2
+    assert {t["tenant"] for t in fair["tenants"]} == {"gold", "free"}
+    shed = srv["shed_leg"]
+    assert (shed["completed"] + shed["shed"] + shed["expired"]
+            == shed["submitted"])
+    assert 0.0 < shed["shed_rate"] < 1.0
+    assert isinstance(srv["fairness_gated"], bool)
+
+
+def test_validate_gates_serving(doc):
+    bad = json.loads(json.dumps(doc))
+    bad["serving"]["fairness_gated"] = True
+    bad["serving"]["fairness"]["measured_ratio"] = 10.0
+    bad["serving"]["fairness"]["expected_ratio"] = 2.0
+    assert any("weighted-fair dispatch" in e
+               for e in check_bench.validate(bad))
+    # not gated: the deviation is recorded, not enforced (machine property)
+    bad["serving"]["fairness_gated"] = False
+    assert not any("weighted-fair" in e for e in check_bench.validate(bad))
+    bad = json.loads(json.dumps(doc))
+    bad["serving"]["fairness"]["shed"] = 3
+    assert any("capacity remained" in e for e in check_bench.validate(bad))
+    bad = json.loads(json.dumps(doc))
+    bad["serving"]["shed_leg"]["completed"] += 1   # accounting broken
+    assert any("exactly one counted outcome" in e
+               for e in check_bench.validate(bad))
+    bad = json.loads(json.dumps(doc))
+    bad["serving"]["shed_leg"]["shed_rate"] = 0.0
+    assert any("shed_rate" in e for e in check_bench.validate(bad))
+    missing = json.loads(json.dumps(doc))
+    del missing["serving"]
+    assert any("serving" in e for e in check_bench.validate(missing))
+
+
+def test_compare_flags_fairness_gated_loss_same_env_only(doc):
+    base = json.loads(json.dumps(doc))
+    base["serving"]["fairness_gated"] = True
+    # pin the ratio at the gate's happy path: whether the *live* probe hit
+    # the tolerance is the machine's business, not this compare test's
+    fair = base["serving"]["fairness"]
+    fair["measured_ratio"] = fair["expected_ratio"]
+    cur = json.loads(json.dumps(base))
+    cur["serving"]["fairness_gated"] = False
+    errs = check_bench.compare(base, cur)           # same environment
+    assert any("fairness_gated" in e for e in errs)
+    cur["env"]["platform"] = "other-machine"        # cross-env: note only
+    notes: list = []
+    assert check_bench.compare(base, cur, notes=notes) == []
+    assert any("fairness" in n for n in notes)
 
 
 def test_compare_identical_passes(doc):
@@ -284,8 +340,8 @@ def test_check_bench_cli(doc, tmp_path):
 # -- the committed baseline CI gates against ----------------------------------
 
 def test_committed_baseline_is_valid():
-    path = ROOT / "BENCH_PR7.json"
-    assert path.exists(), "BENCH_PR7.json baseline missing from repo root"
+    path = ROOT / "BENCH_PR8.json"
+    assert path.exists(), "BENCH_PR8.json baseline missing from repo root"
     base = json.loads(path.read_text())
     assert check_bench.validate(base) == []
     # generated at the CI bench-smoke shape: 8 simulated banks, full registry

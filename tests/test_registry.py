@@ -54,7 +54,8 @@ def test_scheduler_serves_serialized_only(bank_grid, rng):
     s1 = rng.integers(0, 4, 48).astype(np.int32)
     s2 = rng.integers(0, 4, 40).astype(np.int32)
     adj = prim.bfs.random_graph(101, 3, seed=7)
-    nw_req = sched.submit("NW", s1, s2, priority=1)
+    nw_req = sched.submit("NW", s1, s2,
+                          options=pim.RequestOptions(priority=1))
     bfs_req = sched.submit("BFS", adj, 0)
     sched.drain()
     assert (nw_req.result() == prim.nw.ref(s1, s2)).all()

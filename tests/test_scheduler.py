@@ -12,6 +12,7 @@ import numpy as np
 import pytest
 
 from repro import pim, prim
+from repro.pim import RequestOptions
 from repro.prim.common import CHUNKED
 from repro.runtime import Telemetry, run_pipelined
 
@@ -69,7 +70,8 @@ def test_concurrent_mixed_submission(bank_grid, rng):
     submitted = []
     for rep in range(3):                 # interleave all 4 workloads
         for name, args, gold in _cases(rng):
-            submitted.append((sched.submit(name, *args, priority=rep), gold))
+            submitted.append((sched.submit(
+                name, *args, options=RequestOptions(priority=rep)), gold))
     assert sched.pending() == len(submitted)
     assert sched.drain() == len(submitted)
     for req, gold in submitted:
@@ -92,11 +94,12 @@ def test_threaded_serving(bank_grid, rng):
 def test_priority_then_fifo(bank_grid, rng):
     sched = _sched(bank_grid, n_chunks=2, max_batch_requests=1)
     a = rng.integers(0, 9, 64).astype(np.int32)
-    low = sched.submit("VA", a, a, priority=0)
-    mid = sched.submit("RED", a, priority=1)
-    high = sched.submit("SEL", a, priority=2)
+    low = sched.submit("VA", a, a, options=RequestOptions(priority=0))
+    mid = sched.submit("RED", a, options=RequestOptions(priority=1))
+    high = sched.submit("SEL", a, options=RequestOptions(priority=2))
     mid2 = sched.submit("GEMV", a.astype(np.float32).reshape(8, 8),
-                        np.ones(8, np.float32), priority=1)
+                        np.ones(8, np.float32),
+                        options=RequestOptions(priority=1))
     sched.drain()
     order = sorted(sched.telemetry.records, key=lambda r: r.t_start)
     ids = [r.request_id for r in order]
@@ -136,9 +139,9 @@ def test_batching_never_jumps_higher_priority(bank_grid, rng):
     ahead of it."""
     sched = _sched(bank_grid, n_chunks=2)
     a = rng.integers(0, 9, 64).astype(np.int32)
-    va_hi = sched.submit("VA", a, a, priority=2)
-    red_mid = sched.submit("RED", a, priority=1)
-    va_lo = sched.submit("VA", a, a, priority=0)
+    va_hi = sched.submit("VA", a, a, options=RequestOptions(priority=2))
+    red_mid = sched.submit("RED", a, options=RequestOptions(priority=1))
+    va_lo = sched.submit("VA", a, a, options=RequestOptions(priority=0))
     sched.drain()
     order = sorted(sched.telemetry.records, key=lambda r: r.t_start)
     assert [r.request_id for r in order] == [va_hi.record.request_id,
@@ -175,7 +178,7 @@ def test_telemetry_records(bank_grid, rng):
     sink = Telemetry()
     sched = _sched(bank_grid, n_chunks=3, telemetry=sink)
     a = rng.integers(0, 9, 4096).astype(np.int32)
-    req = sched.submit("VA", a, a, priority=7)
+    req = sched.submit("VA", a, a, options=RequestOptions(priority=7))
     sched.drain()
     (rec,) = sink.records
     assert rec is req.record
@@ -238,19 +241,22 @@ def test_scheduler_records_mlp_batch_items(bank_grid, rng):
     e.compare(req.result(timeout=0), e.ref(*args))
 
 
-# -- runtime namespace split --------------------------------------------------
+# -- runtime namespace --------------------------------------------------------
 
-def test_runtime_flat_reexports_are_deprecated():
-    """Train-side utilities moved behind repro.runtime.elastic/.straggler;
-    the old flat names still resolve but warn."""
+def test_runtime_flat_reexports_are_first_class():
+    """elastic/straggler graduated from deprecated train-side shims to live
+    serving-tier dependencies (DESIGN.md §13): the flat names resolve
+    warning-free and are the same objects as the submodules'."""
     import repro.runtime as rt
     from repro.runtime import elastic, straggler
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")     # any DeprecationWarning fails
         assert rt.carve_mesh is elastic.carve_mesh
+        assert rt.RankAllocator is elastic.RankAllocator
         assert rt.StepMonitor is straggler.StepMonitor
-    assert len(w) == 2
-    assert all(issubclass(x.category, DeprecationWarning) for x in w)
-    assert "repro.runtime.elastic" in str(w[0].message)
+        assert rt.Watchdog is straggler.Watchdog
+    for name in ("carve_mesh", "RankAllocator", "StepMonitor", "Watchdog",
+                 "RequestOptions", "QueueFull", "DeadlineExpired"):
+        assert name in rt.__all__
     with pytest.raises(AttributeError):
         rt.no_such_name

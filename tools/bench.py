@@ -38,7 +38,12 @@ time on the first resident workload, the cache hit ratio, and the scatter
 seconds the warm hits elided — ``check_bench.py`` gates warm <= cold and
 warm-hit scatter-seconds ~ 0.
 
-    PYTHONPATH=src python tools/bench.py --smoke --banks 8 --out BENCH_PR7.json
+A ``serving`` object (DESIGN.md §13, ``benchmarks/loadgen.py``) measures
+the multi-tenant tier: a saturating two-tenant 2:1 fairness leg (measured
+goodput ratio vs the weight ratio, gated via ``fairness_gated``) and an
+overloaded open-loop shed leg (exact outcome accounting, sane shed rate).
+
+    PYTHONPATH=src python tools/bench.py --smoke --banks 8 --out BENCH_PR8.json
     PYTHONPATH=src python tools/bench.py roofline            # 4th subcommand
 """
 from __future__ import annotations
@@ -309,6 +314,14 @@ def _residency_section(grid, names, smoke: bool) -> dict:
     }
 
 
+def _serving_section(grid, smoke: bool) -> dict:
+    """The artifact's ``serving`` object (DESIGN.md §13): delegated to the
+    load harness — a saturating two-tenant fairness leg plus an overloaded
+    shed leg on fresh sessions over the shared grid."""
+    from benchmarks.loadgen import serving_section
+    return serving_section(grid, smoke=smoke)
+
+
 def collect(grid=None, workloads=None, *, n_requests: int = 6,
             scale: int = 2, smoke: bool = False,
             pr_tag: str | None = None) -> dict:
@@ -348,6 +361,7 @@ def collect(grid=None, workloads=None, *, n_requests: int = 6,
         "scaling": _scaling_section(session, names, smoke),
         "observability": _observability_section(session.grid, names, smoke),
         "residency": _residency_section(session.grid, names, smoke),
+        "serving": _serving_section(session.grid, smoke),
         # the fourth benchmark: rows ride along when dry-run records exist
         # ([] otherwise — the LM roofline needs repro.launch.dryrun output)
         "roofline": rl.rows(rl.load_records()),

@@ -116,6 +116,43 @@ def residency_table(res: dict) -> list[str]:
     ]
 
 
+def serving_table(srv: dict) -> list[str]:
+    """Multi-tenant fairness + shed-leg measurement (schema repro-bench/5)."""
+    if not srv or not srv.get("fairness"):
+        return []
+    fair, shed = srv["fairness"], srv.get("shed_leg", {})
+    gated = "gated" if srv.get("fairness_gated") else "not gated (noisy host)"
+    lines = [
+        "",
+        "#### Serving: weighted fairness & load shedding",
+        "",
+        f"saturating goodput ratio {fair['measured_ratio']:.2f} vs weight "
+        f"ratio {fair['expected_ratio']:.2f} over "
+        f"{fair.get('window_total', 0)} dispatches · {gated}",
+    ]
+    rows = shed.get("tenants", [])
+    if rows:
+        lines += [
+            "",
+            "| tenant | mix | submitted | completed | shed | expired "
+            "| p50 ms | p99 ms | goodput req/s |",
+            "|---|---|---|---|---|---|---|---|---|",
+        ]
+        for r in rows:
+            lines.append(
+                f"| {r['tenant']} | {r.get('mix', '—')} | {r['submitted']} "
+                f"| {r['completed']} | {r['shed']} | {r['expired']} "
+                f"| {_fmt(r.get('p50_ms'), 2)} | {_fmt(r.get('p99_ms'), 2)} "
+                f"| {_fmt(r.get('goodput_rps'), 1)} |"
+            )
+        lines.append(
+            f"\nshed leg: {shed.get('shed_rate', 0.0):.1%} shed at "
+            f"{shed.get('goodput_rps', 0.0):.1f} req/s goodput "
+            "(gated: exact outcome accounting, 0 < shed rate < 1)"
+        )
+    return lines
+
+
 def summarize(doc: dict) -> str:
     env, settings = doc["env"], doc["settings"]
     kind = "smoke" if settings.get("smoke") else "full"
@@ -139,6 +176,7 @@ def summarize(doc: dict) -> str:
         ),
         *observability_table(doc.get("observability", {})),
         *residency_table(doc.get("residency", {})),
+        *serving_table(doc.get("serving", {})),
     ]
     return "\n".join(lines) + "\n"
 

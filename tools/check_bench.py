@@ -36,8 +36,17 @@ promise, checked on every artifact.  Schema repro-bench/4 adds the
 rep's scatter seconds must be ~0 (<= :data:`WARM_SCATTER_FRAC` of the cold
 rep's, or the absolute :data:`WARM_SCATTER_FLOOR_S` noise floor) — a warm
 hit that still pushes bytes means the cache stopped eliding transfers.
+Schema repro-bench/5 adds the ``serving`` object (DESIGN.md §13,
+``benchmarks/loadgen.py``): under a saturating two-tenant load the
+measured goodput ratio must sit within :data:`FAIRNESS_TOLERANCE` of the
+configured weight ratio (gated when ``fairness_gated`` — like
+``weak_gated``, a measured machine property), no deadline-feasible request
+may be shed while capacity remains (the fairness leg runs unbounded, so
+its shed count must be 0), and the overloaded shed leg's accounting must
+be exact (completed + shed + expired == submitted, shed rate strictly
+between 0 and 1).
 
-    python tools/check_bench.py BENCH_PR7.json BENCH_ci.json [--threshold 0.25]
+    python tools/check_bench.py BENCH_PR8.json BENCH_ci.json [--threshold 0.25]
 """
 from __future__ import annotations
 
@@ -47,7 +56,7 @@ import math
 import pathlib
 import sys
 
-SCHEMA = "repro-bench/4"
+SCHEMA = "repro-bench/5"
 
 #: relative drop in overlap speedup (or rise in time, with --strict-timing)
 #: tolerated before the gate fails
@@ -75,6 +84,11 @@ WARM_SCATTER_FRAC = 0.10
 #: scatter is itself small, so a few ms of host-side bookkeeping (lock +
 #: cache lookup, still counted in the cpu_dpu bucket) must not fail the gate
 WARM_SCATTER_FLOOR_S = 5e-3
+
+#: tolerated deviation of the measured saturating goodput ratio from the
+#: configured weight ratio, as a fraction of the expected ratio (the
+#: serving tier's weighted-fairness promise, DESIGN.md §13)
+FAIRNESS_TOLERANCE = 0.25
 
 _TIE_EPS = 1e-9
 
@@ -228,6 +242,63 @@ def _check_residency(res, errors: list[str]) -> None:
             "operand push, not repeat it")
 
 
+def _check_serving(srv, errors: list[str]) -> None:
+    """The ``serving`` object (DESIGN.md §13): fairness-leg goodput ratio
+    against the weight ratio (when the machine sustained it —
+    ``fairness_gated``, same convention as ``weak_gated``), zero shed on
+    the unbounded fairness leg, and exact outcome accounting on the
+    overloaded shed leg."""
+    where = "serving"
+    fair = srv.get("fairness")
+    if not isinstance(fair, dict):
+        errors.append(f"{where}.fairness: must be an object")
+        return
+    for key in ("measured_ratio", "expected_ratio"):
+        if not _finite_pos(fair.get(key)):
+            errors.append(f"{where}.fairness.{key}: want finite > 0, "
+                          f"got {fair.get(key)!r}")
+            return
+    if not (isinstance(fair.get("shed"), int) and fair["shed"] == 0):
+        errors.append(
+            f"{where}.fairness.shed: want 0, got {fair.get('shed')!r} — "
+            "the fairness leg runs without a queue bound, so shedding "
+            "there means a deadline-feasible request was refused while "
+            "capacity remained")
+    if srv.get("fairness_gated"):
+        tol = FAIRNESS_TOLERANCE * fair["expected_ratio"]
+        if abs(fair["measured_ratio"] - fair["expected_ratio"]) > tol:
+            errors.append(
+                f"{where}.fairness: measured goodput ratio "
+                f"{fair['measured_ratio']:.2f} deviates from the weight "
+                f"ratio {fair['expected_ratio']:.2f} by more than "
+                f"{FAIRNESS_TOLERANCE:.0%} — weighted-fair dispatch is "
+                "not delivering the configured shares")
+    shed = srv.get("shed_leg")
+    if not isinstance(shed, dict):
+        errors.append(f"{where}.shed_leg: must be an object")
+        return
+    for key in ("submitted", "completed", "shed", "expired"):
+        v = shed.get(key)
+        if not (isinstance(v, int) and v >= 0):
+            errors.append(f"{where}.shed_leg.{key}: want int >= 0, "
+                          f"got {v!r}")
+            return
+    if shed["completed"] + shed["shed"] + shed["expired"] \
+            != shed["submitted"]:
+        errors.append(
+            f"{where}.shed_leg: completed {shed['completed']} + shed "
+            f"{shed['shed']} + expired {shed['expired']} != submitted "
+            f"{shed['submitted']} — every offered request must have "
+            "exactly one counted outcome")
+    rate = shed.get("shed_rate")
+    if not (isinstance(rate, (int, float)) and math.isfinite(rate)
+            and 0.0 < rate < 1.0):
+        errors.append(
+            f"{where}.shed_leg.shed_rate: want 0 < rate < 1 (the leg "
+            "deliberately overloads a bounded queue: something must be "
+            f"shed, something must be served), got {rate!r}")
+
+
 def validate(doc) -> list[str]:
     """Structural schema check; returns a list of errors (empty = valid)."""
     errors: list[str] = []
@@ -236,13 +307,14 @@ def validate(doc) -> list[str]:
     if doc.get("schema") != SCHEMA:
         errors.append(f"schema: want {SCHEMA!r}, got {doc.get('schema')!r}")
     for key in ("env", "settings", "model", "workloads", "scaling",
-                "observability", "residency"):
+                "observability", "residency", "serving"):
         if not isinstance(doc.get(key), dict):
             errors.append(f"missing or non-object top-level key {key!r}")
     if errors:
         return errors
     _check_observability(doc["observability"], errors)
     _check_residency(doc["residency"], errors)
+    _check_serving(doc["serving"], errors)
 
     env = doc["env"]
     for key in ("python", "jax", "platform"):
@@ -371,6 +443,19 @@ def compare(base: dict, cur: dict, threshold: float = DEFAULT_THRESHOLD,
             notes.append("current artifact did not sustain the "
                          "weak-scaling invariant (different environment: "
                          "not gated)")
+
+    # same convention for the serving tier's fairness property: losing it
+    # on the same environment is a scheduler regression, elsewhere a note
+    if base["serving"].get("fairness_gated") \
+            and not cur["serving"].get("fairness_gated"):
+        if gate_ratios:
+            errors.append(
+                "serving.fairness_gated: the baseline sustained the "
+                "weighted-fairness ratio on this environment, the current "
+                "run lost it — weighted-fair dispatch regressed")
+        elif notes is not None:
+            notes.append("current artifact did not sustain the fairness "
+                         "ratio (different environment: not gated)")
 
     for name, bw in base["workloads"].items():
         cw = cur["workloads"].get(name)
