@@ -31,7 +31,7 @@ Two replay modes:
   completed / shed / expired per tenant, latency percentiles, goodput.
 
 ``serving_section()`` packages both into the ``serving`` object of the
-bench artifact (``tools/bench.py``, schema ``repro-bench/5``), which
+bench artifact (``tools/bench.py``, schema ``repro-bench/6``), which
 ``tools/check_bench.py`` gates: measured fairness ratio within tolerance
 of the weight ratio, nothing shed while capacity remained, shed-leg
 accounting exact.
@@ -292,7 +292,7 @@ def run_trace(session, specs, duration_s: float = 2.0,
 
 
 # ---------------------------------------------------------------------------
-# bench artifact section (tools/bench.py, schema repro-bench/5)
+# bench artifact section (tools/bench.py, schema repro-bench/6)
 # ---------------------------------------------------------------------------
 
 def serving_section(grid, smoke: bool = False, seed: int = 0) -> dict:

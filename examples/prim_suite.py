@@ -11,11 +11,6 @@ serialized baseline, not the pipelined runtime.
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/prim_suite.py     # 8-bank grid
 """
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
 import numpy as np
 
 from repro import pim

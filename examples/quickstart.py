@@ -8,11 +8,6 @@ faithful serialized `pim()` otherwise.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
 import numpy as np
 
 from repro import pim

@@ -7,11 +7,6 @@ straggler monitoring, and restart-on-relaunch.
 """
 import argparse
 import dataclasses
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
 import jax
 
 from repro import optim

@@ -1,0 +1,141 @@
+"""Model → PIM bridge: extract a decoder's per-layer matvec operands in the
+banked layout the decode engine pins on the ranks (DESIGN.md §14).
+
+The decode hot path is GEMV-dominant: per token, every layer runs four
+attention projections (q/k/v/o) and the two MLP halves (fused gate|up and
+down).  ``repro.pim.decode`` routes exactly those six matvecs through the
+PrIM workloads ``GEMV-B`` (``W @ x + b``) and ``GEMV-G`` (the SwiGLU gated
+hidden) — everything else (norms, rope, KV append, attention softmax,
+lm_head) stays on the host, where the model's own jnp functions keep the
+numerics identical to :func:`repro.launch.serve.greedy_generate`.
+
+This module is the translation layer: it walks the transformer param tree
+(``prologue`` blocks + the vmap-stacked repeating ``group``), checks the
+architecture is within the engine's contract, and emits each projection as
+the **row-major operand pytree** the GEMV decomposition wants:
+
+* the model stores activations-on-the-left weights ``(d_in, d_out)``; the
+  paper's GEMV decomposition shards *output rows* across DPUs (§4.2), so
+  every matrix is transposed once here, at extraction, to ``(d_out, d_in)``;
+* biases are materialized (zeros when the arch has none — exact ``+ 0.0``)
+  so one resident pytree per projection covers both cases;
+* the fused ``wi = gate|up`` matrix splits into the two ``(d_ff, d_model)``
+  halves GEMV-G shards together, keeping each output element's gate and up
+  rows on the same bank.
+
+Everything is float32: the banked matvec computes in the operand dtype, and
+token-exact parity with the pure-JAX reference is only claimed for float32
+params (bfloat16 rounding differs between the two reduction orders).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import ModelConfig
+from .transformer import layer_plan
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerWeights:
+    """One decoder layer's PIM-side operands + host-side norm scales.
+
+    ``q``/``k``/``v``/``o``/``down`` are GEMV-B pytrees ``{"w", "b"}``;
+    ``gate_up`` is the GEMV-G pytree ``{"wg", "wu"}``.  Each pytree is what
+    the engine wraps in one :class:`~repro.runtime.resident.ResidentHandle`
+    and pins as a unit.
+    """
+
+    q: dict
+    k: dict
+    v: dict
+    o: dict
+    gate_up: dict
+    down: dict
+    norm1: Any                 # (d,) host-side rms_norm scales
+    norm2: Any
+
+
+def validate_decode_config(cfg: ModelConfig) -> None:
+    """Reject configs outside the decode engine's contract.
+
+    The engine replicates ``transformer.decode_step`` for the plain
+    attention + dense-SwiGLU block only; anything that changes the block
+    dataflow (parallel residual, MoE routing, SSM/xLSTM mixers, cross
+    attention) or the numerics contract (non-float32 params) raises here,
+    at construction, instead of silently diverging from the reference.
+    """
+    if cfg.dtype != jnp.float32:
+        raise ValueError(
+            f"decode engine requires float32 params for token-exact parity "
+            f"with the jnp reference; {cfg.name} has dtype={cfg.dtype}")
+    if cfg.parallel_block:
+        raise ValueError(
+            f"{cfg.name}: parallel_block (attn ∥ ffn off one norm) changes "
+            "the residual dataflow — not supported by the decode engine")
+    pro, period, _ = layer_plan(cfg)
+    for li, desc in enumerate(pro + period):
+        if desc["mixer"] != "attn":
+            raise ValueError(
+                f"{cfg.name} layer {li}: mixer {desc['mixer']!r} is not "
+                "offloadable — the decode engine handles attention blocks "
+                "only (mamba/xlstm/cross layers have no GEMV hot path)")
+        if desc["ffn"] != "dense":
+            raise ValueError(
+                f"{cfg.name} layer {li}: ffn {desc['ffn']!r} — only the "
+                "dense SwiGLU FFN maps onto GEMV-G/GEMV-B (MoE routing is "
+                "token-dependent; 'none' has nothing to offload)")
+
+
+def _f32(a) -> np.ndarray:
+    return np.asarray(a, np.float32)
+
+
+def _rows(a) -> np.ndarray:
+    """Transpose to the row-sharded (d_out, d_in) GEMV layout, contiguous
+    so the per-chunk device pushes are single copies."""
+    return np.ascontiguousarray(_f32(a).T)
+
+
+def _bias(p: dict, key: str, n: int) -> np.ndarray:
+    return _f32(p[key]) if key in p else np.zeros(n, np.float32)
+
+
+def _layer_params(params, n_prologue: int, period_len: int, li: int):
+    """The li-th global layer's param dict: prologue blocks are plain list
+    entries; repeated blocks index the vmap-stacked group leaves at
+    (repeat, position) = divmod(li - n_prologue, period_len)."""
+    if li < n_prologue:
+        return params["prologue"][li]
+    r, pos = divmod(li - n_prologue, period_len)
+    return jax.tree.map(lambda a: a[r], params["group"][pos])
+
+
+def extract_decode_weights(params, cfg: ModelConfig) -> list[LayerWeights]:
+    """Per-global-layer PIM operands for every decoder layer, in layer
+    order.  Validates the config first; the result is position-stable, so
+    the engine's (layer, proj) handle map survives across steps."""
+    validate_decode_config(cfg)
+    pro, period, _ = layer_plan(cfg)
+    d, hd = cfg.d_model, cfg.hd
+    H, KVH = cfg.n_heads, cfg.n_kv_heads
+    layers = []
+    for li in range(cfg.n_layers):
+        p = _layer_params(params, len(pro), max(len(period), 1), li)
+        m = p["mixer"]
+        wi = _f32(p["ffn"]["wi"])                  # (d, 2f) fused gate|up
+        f = wi.shape[1] // 2
+        layers.append(LayerWeights(
+            q={"w": _rows(m["wq"]), "b": _bias(m, "bq", H * hd)},
+            k={"w": _rows(m["wk"]), "b": _bias(m, "bk", KVH * hd)},
+            v={"w": _rows(m["wv"]), "b": _bias(m, "bv", KVH * hd)},
+            o={"w": _rows(m["wo"]), "b": np.zeros(d, np.float32)},
+            gate_up={"wg": np.ascontiguousarray(wi[:, :f].T),
+                     "wu": np.ascontiguousarray(wi[:, f:].T)},
+            down={"w": _rows(p["ffn"]["wo"]), "b": np.zeros(d, np.float32)},
+            norm1=p["norm1"], norm2=p["norm2"]))
+    return layers

@@ -241,6 +241,14 @@ class PimSession:
         return self._closed
 
     @property
+    def serving(self) -> bool:
+        """True between :meth:`start` and :meth:`close` — the worker thread
+        owns dispatch and ``drain()`` is forbidden (results arrive via
+        futures).  The decode engine branches on this to drive its step
+        groups in either mode."""
+        return self._serving
+
+    @property
     def tracer(self) -> Tracer | None:
         """This session's span tracer (None when tracing is off) —
         DESIGN.md §11.  Enable with ``trace=True`` / ``trace="out.json"`` or

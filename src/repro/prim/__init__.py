@@ -10,7 +10,8 @@ Workload → module map (paper Table 2 order):
 benchmark args, and the equivalence comparator.  ``ALL`` (name → module) is
 derived from it for back-compat.
 """
-from . import bfs, bs, gemv, hist, mlp, nw, red, scan, sel, spmv, trns, ts, uni, va
+from . import bfs, bs, gemv, gemv_fused, hist, mlp, nw, red, scan, sel, spmv
+from . import trns, ts, uni, va
 from . import common, registry
 from .registry import PIPELINEABLE, REGISTRY, SERIALIZED_ONLY
 
@@ -18,4 +19,4 @@ ALL = {name: e.module for name, e in REGISTRY.items()}
 
 __all__ = (["ALL", "REGISTRY", "PIPELINEABLE", "SERIALIZED_ONLY",
             "common", "registry"]
-           + [m.__name__.split(".")[-1] for m in ALL.values()])
+           + sorted({m.__name__.split(".")[-1] for m in ALL.values()}))

@@ -33,7 +33,8 @@ from typing import Callable, Mapping
 
 import numpy as np
 
-from . import bfs, bs, gemv, hist, mlp, nw, red, scan, sel, spmv, trns, ts, uni, va
+from . import bfs, bs, gemv, gemv_fused, hist, mlp, nw, red, scan, sel, spmv
+from . import trns, ts, uni, va
 from .common import CHUNKED, ChunkedWorkload
 
 
@@ -113,6 +114,18 @@ def _args_gemv(rng, scale=1):
             rng.normal(size=256).astype(np.float32))
 
 
+def _args_gemv_b(rng, scale=1):
+    return ({"w": rng.normal(size=(512 * scale, 256)).astype(np.float32),
+             "b": rng.normal(size=512 * scale).astype(np.float32)},
+            rng.normal(size=256).astype(np.float32))
+
+
+def _args_gemv_g(rng, scale=1):
+    return ({"wg": rng.normal(size=(256 * scale, 256)).astype(np.float32),
+             "wu": rng.normal(size=(256 * scale, 256)).astype(np.float32)},
+            rng.normal(size=256).astype(np.float32))
+
+
 def _args_spmv(rng, scale=1):
     rows = 512 * scale
     ip, ix, dv = spmv.random_csr(rows, 256, 8, seed=int(rng.integers(1 << 30)))
@@ -187,6 +200,10 @@ def _entries():
         e("VA", "§4.1", va, va.ref, va.pim, va.chunked, _args_va),
         e("GEMV", "§4.2", gemv, gemv.ref, gemv.pim, gemv.chunked,
           _args_gemv, assert_close),
+        e("GEMV-B", "§4.2", gemv_fused, gemv_fused.ref_b, gemv_fused.pim_b,
+          gemv_fused.chunked_b, _args_gemv_b, assert_close),
+        e("GEMV-G", "§4.2", gemv_fused, gemv_fused.ref_g, gemv_fused.pim_g,
+          gemv_fused.chunked_g, _args_gemv_g, assert_close),
         e("SpMV", "§4.3", spmv, spmv.ref, spmv.pim, spmv.chunked,
           _args_spmv, assert_close),
         e("SEL", "§4.4", sel, sel.ref, sel.pim, sel.chunked, _args_sel),

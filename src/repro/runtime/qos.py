@@ -25,6 +25,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import warnings
+from typing import Mapping
 
 #: the tenant requests land on when none is named — single-tenant sessions
 #: never need to know tenants exist
@@ -73,12 +74,18 @@ class RequestOptions:
       scheduler drops expired ones at dispatch (``DeadlineExpired``).
     * ``weight`` — overrides/creates the tenant's fair-share weight at
       submit (None keeps the session's configured weight).
+    * ``tags`` — free-form key→value labels copied onto the request's
+      telemetry record and its trace spans (no scheduler mechanism).  The
+      decode engine tags every projection matvec ``layer=i, proj=q|k|v|o|
+      up|down`` so phase accounting can be grouped per layer (DESIGN.md
+      §14).
     """
 
     tenant: str = DEFAULT_TENANT
     priority: int = 0
     deadline_s: float | None = None
     weight: float | None = None
+    tags: Mapping | None = None
 
     def __post_init__(self):
         if self.deadline_s is not None and self.deadline_s <= 0:

@@ -56,9 +56,18 @@ if TYPE_CHECKING:  # annotation-only: avoid importing the workload suite
 
 def content_digest(value) -> str:
     """sha1 over every array leaf of ``value``: dtype + shape + logical
-    bytes.  The placement-independent half of :func:`fingerprint`."""
+    bytes.  The placement-independent half of :func:`fingerprint`.
+
+    ``value`` may be any pytree (a dict/list of arrays digests leaf-wise,
+    so a whole weight dict hashes in one pass), and any leaf may be a
+    :class:`ResidentHandle` — its precomputed digest stands in for that
+    leaf's O(bytes) rehash."""
     h = hashlib.sha1()
-    for leaf in jax.tree_util.tree_leaves(value):
+    for leaf in jax.tree_util.tree_leaves(
+            value, is_leaf=lambda x: isinstance(x, ResidentHandle)):
+        if isinstance(leaf, ResidentHandle):
+            h.update(leaf.digest.encode())
+            continue
         a = np.asarray(leaf)
         h.update(a.dtype.str.encode())
         h.update(repr(a.shape).encode())
@@ -78,9 +87,12 @@ class ResidentHandle:
     ``run()``/``submit()``/``map()``/``pin()`` args: the cached digest
     stands in for the O(bytes) rehash, so warm requests cost O(1) host
     work.  The handle fingerprints identically to the raw array it wraps
-    (same cache entry either way).  Mutating the wrapped array afterwards
-    is caller-owned breakage — the stale digest would serve stale
-    resident data.
+    (same cache entry either way).  The wrapped value may be a whole
+    pytree — a dict/list of arrays digests leaf-wise in the one
+    construction pass, so a weight dict pins in one call — and handles
+    may also sit *inside* a pytree operand (unwrap and digest are both
+    recursive).  Mutating the wrapped array afterwards is caller-owned
+    breakage — the stale digest would serve stale resident data.
     """
 
     __slots__ = ("value", "digest")
@@ -94,10 +106,19 @@ class ResidentHandle:
 
 
 def unwrap_handles(args: tuple) -> tuple:
-    """Replace top-level :class:`ResidentHandle` wrappers in an argument
-    tuple with the arrays they wrap (workloads never see the token)."""
-    return tuple(a.value if isinstance(a, ResidentHandle) else a
-                 for a in args)
+    """Replace :class:`ResidentHandle` wrappers in an argument tuple with
+    the values they wrap (workloads never see the token).  Handles may sit
+    at the top level or nested anywhere inside a pytree argument (a dict /
+    list of arrays — e.g. a whole weight dict wrapped leaf-wise)."""
+    def _unwrap(a):
+        if isinstance(a, ResidentHandle):
+            return a.value
+        if isinstance(a, (np.ndarray, jax.Array)):
+            return a            # fast path: no tree traversal per array
+        return jax.tree_util.tree_map(
+            lambda x: x.value if isinstance(x, ResidentHandle) else x, a,
+            is_leaf=lambda x: isinstance(x, ResidentHandle))
+    return tuple(_unwrap(a) for a in args)
 
 
 def fingerprint(workload: str, payload, placement: tuple) -> str:

@@ -89,6 +89,13 @@ if TYPE_CHECKING:  # annotation-only: importing repro.prim pulls the suite
     from .autotune import TunedPlan
 
 
+def _span_tags(rec: RequestRecord) -> dict:
+    """Caller tags (RequestOptions.tags) to fold into a request's ``serve``
+    span — reserved span-arg names are dropped rather than collide."""
+    reserved = ("name", "cat", "track", "workload", "req", "tenant")
+    return {k: v for k, v in rec.tags.items() if k not in reserved}
+
+
 def _nitems(args) -> int:
     """Leading dim of the first array leaf — the ``n_items`` a request's
     telemetry record reports (batching itself is byte-capped via
@@ -234,7 +241,8 @@ class PimScheduler:
                              n_items=_nitems(sized), bytes_in=_nbytes(sized),
                              priority=opts.priority, tenant=opts.tenant,
                              deadline_s=opts.deadline_s or 0.0,
-                             t_submit=now(), n_banks=self.grid.n_banks)
+                             t_submit=now(), n_banks=self.grid.n_banks,
+                             tags=dict(opts.tags or {}))
 
     def _key(self, req: PimRequest) -> tuple:
         """Heap order within a tenant: priority desc, earliest deadline,
@@ -493,7 +501,8 @@ class PimScheduler:
             if tr.enabled:
                 tr.emit("serve", "session", rec.t_submit, rec.t_finish,
                         track=f"tenant-{rec.tenant}", workload=rec.workload,
-                        req=rec.request_id, tenant=rec.tenant)
+                        req=rec.request_id, tenant=rec.tenant,
+                        **_span_tags(rec))
 
     def _run_batch(self, batch: Sequence[PimRequest]) -> None:
         bid = next(self._batch_seq)
@@ -540,7 +549,8 @@ class PimScheduler:
             if tr.enabled:
                 tr.emit("serve", "session", rec.t_submit, rec.t_finish,
                         track=f"tenant-{rec.tenant}", workload=rec.workload,
-                        req=rec.request_id, tenant=rec.tenant)
+                        req=rec.request_id, tenant=rec.tenant,
+                        **_span_tags(rec))
 
     def _dispatch(self, batch: Sequence[PimRequest]) -> None:
         """Run one popped batch and settle the fair-share bill: the

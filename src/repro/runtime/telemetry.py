@@ -90,6 +90,9 @@ class RequestRecord:
     predicted_overlap: float = 0.0   # autotune plan's promise (0 = untuned)
     tuned: bool = False              # served under a TunedPlan?
     cache_hit: bool = False          # resident operand served warm? (§12)
+    #: caller labels from RequestOptions.tags (e.g. the decode engine's
+    #: layer=i, proj=q|k|v|o|up|down) — carried verbatim, no aggregation
+    tags: dict = dataclasses.field(default_factory=dict)
 
     @property
     def queue_wait(self) -> float:
@@ -143,7 +146,8 @@ class RequestRecord:
                 "tuned": self.tuned, "cache_hit": self.cache_hit,
                 "predicted_overlap": self.predicted_overlap,
                 "overlap_misprediction": self.overlap_misprediction,
-                "achieved_gbps": self.achieved_gbps}
+                "achieved_gbps": self.achieved_gbps,
+                **{f"tag_{k}": v for k, v in self.tags.items()}}
 
 
 class _WorkloadStats:

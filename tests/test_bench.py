@@ -1,8 +1,9 @@
 """Bench artifact layer: tools/bench.py produces a schema-valid document
 that survives a JSON round trip, tools/check_bench.py validates schemas,
 the monotone weak-scaling invariant, the tracing-overhead gate, the
-residency (warm-vs-cold) gate, the serving (fairness + shed) gate, and
-regressions, and the committed BENCH_PR8.json baseline is valid."""
+residency (warm-vs-cold) gate, the serving (fairness + shed) gate, the
+decode (parity + warm-scatter + tokens/sec) gate, and regressions, and the
+committed BENCH_PR9.json baseline is valid."""
 import json
 import pathlib
 import sys
@@ -156,6 +157,53 @@ def test_validate_gates_serving(doc):
     missing = json.loads(json.dumps(doc))
     del missing["serving"]
     assert any("serving" in e for e in check_bench.validate(missing))
+
+
+def test_collect_decode_section(doc):
+    dec = doc["decode"]
+    assert dec["workload"] == "decode" and dec["parity"] is True
+    cold, warm = dec["cold"], dec["warm"]
+    assert warm["scatter_bytes"] <= (
+        check_bench.DECODE_SCATTER_FRAC * cold["scatter_bytes"])
+    assert cold["scatter_bytes"] > 0 and warm["cached_bytes"] > 0
+    assert warm["tokens_per_s"] >= cold["tokens_per_s"]
+    assert set(warm["pim_s"]) == {"qkv", "o", "up", "down"}
+    assert warm["setup_s"] > 0 and cold["setup_s"] == 0   # only warm pins
+
+
+def test_validate_gates_decode(doc):
+    bad = json.loads(json.dumps(doc))
+    bad["decode"]["parity"] = False
+    assert any("decode.parity" in e for e in check_bench.validate(bad))
+    bad = json.loads(json.dumps(doc))
+    bad["decode"]["warm"]["scatter_bytes"] = (
+        bad["decode"]["cold"]["scatter_bytes"])
+    assert any("warm.scatter_bytes" in e for e in check_bench.validate(bad))
+    bad = json.loads(json.dumps(doc))
+    bad["decode"]["warm"]["tokens_per_s"] = (
+        bad["decode"]["cold"]["tokens_per_s"] * 0.5)
+    assert any("residency must not make decode slower" in e
+               for e in check_bench.validate(bad))
+    none = json.loads(json.dumps(doc))
+    none["decode"] = {"workload": None}      # decode leg skipped: valid
+    assert check_bench.validate(none) == []
+    missing = json.loads(json.dumps(doc))
+    del missing["decode"]
+    assert any("decode" in e for e in check_bench.validate(missing))
+
+
+def test_compare_gates_decode_tokens_per_s(doc):
+    cur = json.loads(json.dumps(doc))
+    cur["decode"]["warm"]["tokens_per_s"] = (
+        doc["decode"]["warm"]["tokens_per_s"] * 0.5)
+    cur["decode"]["cold"]["tokens_per_s"] = (
+        doc["decode"]["cold"]["tokens_per_s"] * 0.5)
+    errs = check_bench.compare(doc, cur)
+    assert any("warm.tokens_per_s" in e for e in errs)
+    cur = json.loads(json.dumps(doc))
+    cur["decode"] = {"workload": None}
+    assert any("missing in current" in e
+               for e in check_bench.compare(doc, cur))
 
 
 def test_compare_flags_fairness_gated_loss_same_env_only(doc):
@@ -340,8 +388,8 @@ def test_check_bench_cli(doc, tmp_path):
 # -- the committed baseline CI gates against ----------------------------------
 
 def test_committed_baseline_is_valid():
-    path = ROOT / "BENCH_PR8.json"
-    assert path.exists(), "BENCH_PR8.json baseline missing from repo root"
+    path = ROOT / "BENCH_PR9.json"
+    assert path.exists(), "BENCH_PR9.json baseline missing from repo root"
     base = json.loads(path.read_text())
     assert check_bench.validate(base) == []
     # generated at the CI bench-smoke shape: 8 simulated banks, full registry

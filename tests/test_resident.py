@@ -36,7 +36,7 @@ from repro.runtime.trace import NULL_TRACER, set_tracer
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 #: the workloads whose registry entries declare a resident operand
-RESIDENT = ("GEMV", "BS", "SpMV", "MLP")
+RESIDENT = ("GEMV", "GEMV-B", "GEMV-G", "BS", "SpMV", "MLP")
 
 #: one GEMV matrix at make_args scale=1: 512 x 256 float32
 GEMV_NBYTES = 512 * 256 * 4
@@ -62,6 +62,8 @@ def test_registry_declares_resident_set():
     reg = pim.registry()
     assert {n for n, e in reg.items() if e.resident} == set(RESIDENT)
     assert reg["GEMV"].resident_args == (0,)
+    assert reg["GEMV-B"].resident_args == (0,)    # pytree {"w", "b"} operand
+    assert reg["GEMV-G"].resident_args == (0,)    # pytree {"wg", "wu"}
     assert reg["SpMV"].resident_args == (0, 1)
     assert reg["MLP"].resident_args == (0,)
     assert reg["BS"].chunked.meta_resident       # broadcast, not chunks
@@ -381,6 +383,70 @@ def test_resident_handle_skips_rehash_and_shares_the_entry(bank_grid,
     assert rec0.bytes_in == A.nbytes + x.nbytes          # sizing unwraps
 
 
+# -- pytree operands: whole weight dicts pin in one call ----------------------
+
+def _gemv_b_args(seed=7):
+    entry = pim.registry()["GEMV-B"]
+    return entry, entry.make_args(np.random.default_rng(seed))
+
+
+def test_pytree_handle_pins_weight_dict_in_one_call(bank_grid):
+    """Satellite: ResidentHandle wraps a whole pytree (GEMV-B's {"w","b"}
+    dict) — one digest pass over the leaves at construction, pin() places
+    it, and every subsequent run is warm without rehashing."""
+    from repro.runtime import resident as res_mod
+    entry, (w, x) = _gemv_b_args()
+    h = pim.ResidentHandle(w)
+    ref_out = entry.ref(w, x)
+    s = pim.PimSession(grid=bank_grid)
+    try:
+        fp = s.pin("GEMV-B", h, np.zeros_like(x))
+        assert isinstance(fp, str) and fp
+        entry.compare(s.run("GEMV-B", h, x), ref_out)    # first run: warm
+        entry.compare(s.run("GEMV-B", h, x), ref_out)
+        cs = s.stats()["cache"]
+    finally:
+        s.close()
+    assert (cs["hits"], cs["misses"], cs["entries"]) == (2, 1, 1)
+    # a raw dict with equal bytes keys the same entry as the handle
+    place = (bank_grid.n_banks, 1, 4)
+    assert fingerprint("GEMV-B", (h,), place) == fingerprint(
+        "GEMV-B", ({"w": w["w"].copy(), "b": w["b"].copy()},), place)
+    # mutating a leaf changes the pytree fingerprint
+    w2 = {"w": w["w"].copy(), "b": w["b"].copy()}
+    w2["b"][0] += 1
+    assert fingerprint("GEMV-B", (w2,), place) != fingerprint(
+        "GEMV-B", (w,), place)
+    # the top-level-handle fast path holds for pytree values too
+    def boom(_value):
+        raise AssertionError("content rehash on the pytree handle path")
+    prev = res_mod.content_digest
+    res_mod.content_digest = boom
+    try:
+        fingerprint("GEMV-B", (h,), place)
+    finally:
+        res_mod.content_digest = prev
+
+
+def test_handles_nested_inside_pytree_operands_unwrap(bank_grid):
+    """Handles may also sit *inside* a dict operand (leaf-wise wrapping):
+    unwrap is recursive, results match ref, and the nested form keys its
+    own entry (the digest string stands in for the leaf bytes)."""
+    from repro.runtime.resident import unwrap_handles
+    entry, (w, x) = _gemv_b_args(seed=8)
+    nested = {"w": pim.ResidentHandle(w["w"]), "b": pim.ResidentHandle(w["b"])}
+    uw, ux = unwrap_handles((nested, x))
+    assert uw["w"] is w["w"] and uw["b"] is w["b"] and ux is x
+    s = pim.PimSession(grid=bank_grid)
+    try:
+        entry.compare(s.run("GEMV-B", nested, x), entry.ref(w, x))
+        entry.compare(s.run("GEMV-B", nested, x), entry.ref(w, x))
+        cs = s.stats()["cache"]
+    finally:
+        s.close()
+    assert (cs["hits"], cs["misses"]) == (1, 1)
+
+
 # -- concurrency --------------------------------------------------------------
 
 def test_concurrent_submits_same_fingerprint_scatter_exactly_once(bank_grid):
@@ -478,7 +544,8 @@ import numpy as np
 from repro import pim
 with pim.session() as s:
     assert s.n_banks == 8, s.n_banks
-    for name in ("GEMV", "BS", "SpMV", "MLP"):
+    names = ("GEMV", "GEMV-B", "GEMV-G", "BS", "SpMV", "MLP")
+    for name in names:
         entry = pim.registry()[name]
         rng = np.random.default_rng(zlib.crc32(name.encode()))
         args = entry.make_args(rng, 1)
@@ -488,8 +555,8 @@ with pim.session() as s:
         np.testing.assert_array_equal(np.asarray(cold), np.asarray(warm))
         print("RESID8-OK", name, flush=True)
     cs = s.stats()["cache"]
-    assert cs["hits"] == 4 and cs["misses"] == 4, cs
-    assert cs["entries"] == 4 and cs["resident_bytes"] > 0, cs
+    assert cs["hits"] == len(names) and cs["misses"] == len(names), cs
+    assert cs["entries"] == len(names) and cs["resident_bytes"] > 0, cs
 print("RESID8-DONE")
 """
 

@@ -42,7 +42,7 @@ def test_grid_and_banks_are_mutually_exclusive(bank_grid):
 
 def test_workload_view_covers_registry(sess):
     assert set(sess.workloads) == set(pim.registry())
-    assert len(pim.registry()) == 14
+    assert len(pim.registry()) == 16
 
 
 # -- lifecycle (dpu_free semantics) -------------------------------------------

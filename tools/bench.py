@@ -43,7 +43,13 @@ the multi-tenant tier: a saturating two-tenant 2:1 fairness leg (measured
 goodput ratio vs the weight ratio, gated via ``fairness_gated``) and an
 overloaded open-loop shed leg (exact outcome accounting, sane shed rate).
 
-    PYTHONPATH=src python tools/bench.py --smoke --banks 8 --out BENCH_PR8.json
+A ``decode`` object (DESIGN.md §14) measures the LLM decode serving tier:
+cold (every step re-scatters every weight) vs warm (weights pinned once at
+setup) tokens/sec on a tiny float32 decoder, both legs token-checked
+against the pure-JAX ``greedy_generate`` — ``check_bench.py`` gates warm
+weight-scatter bytes ~ 0 and warm tokens/sec >= cold.
+
+    PYTHONPATH=src python tools/bench.py --smoke --banks 8 --out BENCH_PR9.json
     PYTHONPATH=src python tools/bench.py roofline            # 4th subcommand
 """
 from __future__ import annotations
@@ -322,6 +328,94 @@ def _serving_section(grid, smoke: bool) -> dict:
     return serving_section(grid, smoke=smoke)
 
 
+def _decode_section(grid, smoke: bool) -> dict:
+    """The artifact's ``decode`` object (DESIGN.md §14): LLM decode
+    tokens/sec end to end on a tiny float32 decoder, cold vs warm.  The
+    cold leg opens a ``resident=False`` session — every step re-scatters
+    every weight; the warm leg pins all projections once and each step
+    moves only activations.  Each leg is a fresh traced session over the
+    shared grid, best-of-reps on tokens/sec, with the weight bytes that
+    crossed the boundary summed from the leg's ``scatter`` /
+    ``scatter:cached`` spans.  Both legs' tokens are checked against the
+    pure-JAX ``greedy_generate`` so the timing can never come from a wrong
+    answer — ``check_bench.py`` gates warm scatter ~ 0 and warm tokens/sec
+    >= cold."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import pim
+    from repro.configs import get_config
+    from repro.launch import serve as serve_mod
+    from repro.models import transformer
+    from repro.runtime.elastic import carve_mesh
+
+    layers, streams, prompt_len = (2, 2, 4) if smoke else (4, 4, 8)
+    max_new = 6 if smoke else 16
+    reps = 2 if smoke else 3
+    cfg = dataclasses.replace(
+        get_config("tinyllama-1.1b", smoke=True), n_layers=layers,
+        d_model=128, n_heads=4, n_kv_heads=2, d_ff=256, vocab=256,
+        dtype=jnp.float32, fast_decode=True)
+    params, specs = transformer.init(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (streams, prompt_len), 0, cfg.vocab)
+    mesh = carve_mesh(jax.devices(), model_parallel=1)
+    ref = np.asarray(serve_mod.greedy_generate(params, cfg, mesh, specs,
+                                               prompt, max_new=max_new))
+
+    def leg(resident: bool) -> dict:
+        sess = pim.PimSession(grid=grid, trace=True, resident=resident)
+        best, setup_s = None, 0.0
+        try:
+            for _ in range(reps):
+                eng = pim.DecodeEngine(params, cfg, session=sess)
+                out = eng.generate(np.asarray(prompt), max_new)
+                assert (out == ref).all(), "PIM decode diverged from ref"
+                rep = eng.report()
+                if best is None or rep["tokens_per_s"] > best["tokens_per_s"]:
+                    best = rep
+                setup_s = max(setup_s, eng.setup_s)
+                for fp in eng.pins:       # re-pin cleanly on the next rep
+                    sess.unpin(fp)
+                if sess.cache is not None:
+                    sess.cache.clear()
+            spans = sess.tracer.spans
+        finally:
+            sess.close()
+        return {
+            "tokens_per_s": best["tokens_per_s"],
+            "time_per_output_token_s": best["time_per_output_token_s"],
+            "generate_s": best["generate_s"],
+            "prefill_s": best["prefill_s"],
+            "setup_s": setup_s,
+            "pim_s": best["pim_s"],
+            "host_s": best["host_s"],
+            "scatter_bytes": sum(s.args.get("bytes", 0) for s in spans
+                                 if s.name == "scatter"),
+            "cached_bytes": sum(s.args.get("bytes", 0) for s in spans
+                                if s.name == "scatter:cached"),
+        }
+
+    cold = leg(resident=False)
+    warm = leg(resident=True)
+    return {
+        "workload": "decode",
+        "config": {"layers": layers, "d_model": cfg.d_model,
+                   "streams": streams, "prompt_len": prompt_len,
+                   "max_new": max_new},
+        "reps": reps,
+        "parity": True,                  # both legs asserted against ref
+        "cold": cold,
+        "warm": warm,
+        "warm_speedup": (cold["time_per_output_token_s"]
+                         / warm["time_per_output_token_s"])
+        if warm["time_per_output_token_s"] else 0.0,
+    }
+
+
 def collect(grid=None, workloads=None, *, n_requests: int = 6,
             scale: int = 2, smoke: bool = False,
             pr_tag: str | None = None) -> dict:
@@ -362,6 +456,7 @@ def collect(grid=None, workloads=None, *, n_requests: int = 6,
         "observability": _observability_section(session.grid, names, smoke),
         "residency": _residency_section(session.grid, names, smoke),
         "serving": _serving_section(session.grid, smoke),
+        "decode": _decode_section(session.grid, smoke),
         # the fourth benchmark: rows ride along when dry-run records exist
         # ([] otherwise — the LM roofline needs repro.launch.dryrun output)
         "roofline": rl.rows(rl.load_records()),
@@ -384,7 +479,7 @@ def main(argv=None) -> int:
                     help="CI-sized run: small scale, few requests, "
                          "characterization slice only")
     ap.add_argument("--out", default="BENCH.json",
-                    help="artifact path (e.g. BENCH_PR5.json)")
+                    help="artifact path (e.g. BENCH_PR9.json)")
     ap.add_argument("--pr-tag", default=None,
                     help="free-form tag recorded in settings.pr_tag")
     ap.add_argument("--requests", type=int, default=None)

@@ -153,6 +153,40 @@ def serving_table(srv: dict) -> list[str]:
     return lines
 
 
+def decode_table(dec: dict) -> list[str]:
+    """LLM decode serving measurement (schema repro-bench/6)."""
+    if not dec or dec.get("workload") is None:
+        return []
+    cold, warm = dec["cold"], dec["warm"]
+    cfg = dec.get("config", {})
+    parity = "token-identical" if dec.get("parity") else "PARITY FAILED"
+    lines = [
+        "",
+        "#### Decode: session-resident weights, tokens/sec end to end",
+        "",
+        f"{cfg.get('layers', '?')} layers · {cfg.get('streams', '?')} "
+        f"streams · {cfg.get('max_new', '?')} new tokens/stream · "
+        f"{parity} vs greedy_generate",
+        "",
+        "| leg | tok/s | ms/token | weight scatter MB | served-resident MB "
+        "| setup s |",
+        "|---|---|---|---|---|---|",
+    ]
+    for name, leg in (("cold (re-scatter)", cold), ("warm (pinned)", warm)):
+        lines.append(
+            f"| {name} | {_fmt(leg['tokens_per_s'], 1)} "
+            f"| {_fmt(leg['time_per_output_token_s'] * 1e3, 1)} "
+            f"| {leg['scatter_bytes'] / 1e6:.2f} "
+            f"| {leg['cached_bytes'] / 1e6:.2f} "
+            f"| {_fmt(leg['setup_s'], 2)} |"
+        )
+    lines.append(
+        f"\nwarm speedup ×{dec.get('warm_speedup', 0.0):.2f} ms/token "
+        "(gated: parity, warm scatter ≤ 1% of cold, warm tok/s ≥ cold)"
+    )
+    return lines
+
+
 def summarize(doc: dict) -> str:
     env, settings = doc["env"], doc["settings"]
     kind = "smoke" if settings.get("smoke") else "full"
@@ -177,6 +211,7 @@ def summarize(doc: dict) -> str:
         *observability_table(doc.get("observability", {})),
         *residency_table(doc.get("residency", {})),
         *serving_table(doc.get("serving", {})),
+        *decode_table(doc.get("decode", {})),
     ]
     return "\n".join(lines) + "\n"
 

@@ -45,8 +45,15 @@ may be shed while capacity remains (the fairness leg runs unbounded, so
 its shed count must be 0), and the overloaded shed leg's accounting must
 be exact (completed + shed + expired == submitted, shed rate strictly
 between 0 and 1).
+Schema repro-bench/6 adds the ``decode`` object (DESIGN.md §14,
+``repro.pim.decode``): LLM decode tokens/sec with session-resident weights,
+gated three ways — both legs must be token-checked against the pure-JAX
+reference (``parity``), the warm leg's weight-scatter bytes must be <=
+:data:`DECODE_SCATTER_FRAC` of the cold leg's (pinned weights cross the
+boundary once, not per token), and warm tokens/sec must be >= cold (weight
+residency must pay, not cost).
 
-    python tools/check_bench.py BENCH_PR8.json BENCH_ci.json [--threshold 0.25]
+    python tools/check_bench.py BENCH_PR9.json BENCH_ci.json [--threshold 0.25]
 """
 from __future__ import annotations
 
@@ -56,7 +63,7 @@ import math
 import pathlib
 import sys
 
-SCHEMA = "repro-bench/5"
+SCHEMA = "repro-bench/6"
 
 #: relative drop in overlap speedup (or rise in time, with --strict-timing)
 #: tolerated before the gate fails
@@ -84,6 +91,11 @@ WARM_SCATTER_FRAC = 0.10
 #: scatter is itself small, so a few ms of host-side bookkeeping (lock +
 #: cache lookup, still counted in the cpu_dpu bucket) must not fail the gate
 WARM_SCATTER_FLOOR_S = 5e-3
+
+#: warm-leg decode weight-scatter bytes must stay under this fraction of
+#: the cold leg's (pinned weights cross the CPU->bank boundary once, at
+#: setup — a warm decode step moves activations only)
+DECODE_SCATTER_FRAC = 0.01
 
 #: tolerated deviation of the measured saturating goodput ratio from the
 #: configured weight ratio, as a fraction of the expected ratio (the
@@ -299,6 +311,55 @@ def _check_serving(srv, errors: list[str]) -> None:
             f"shed, something must be served), got {rate!r}")
 
 
+def _check_decode(dec, errors: list[str]) -> None:
+    """The ``decode`` object (DESIGN.md §14): parity with the pure-JAX
+    reference, near-zero warm weight-scatter bytes, and warm tokens/sec
+    that beats or ties the re-scatter-every-step cold leg — the paper's
+    operand-residency argument applied to the decode hot path."""
+    where = "decode"
+    if dec.get("workload") is None:
+        return      # decode leg skipped (e.g. no offloadable tiny model)
+    if dec.get("parity") is not True:
+        errors.append(f"{where}.parity: want true (both legs token-checked "
+                      f"against greedy_generate), got {dec.get('parity')!r}")
+    cold, warm = dec.get("cold"), dec.get("warm")
+    for leg, name in ((cold, "cold"), (warm, "warm")):
+        if not isinstance(leg, dict):
+            errors.append(f"{where}.{name}: must be an object")
+            return
+        if not _finite_pos(leg.get("tokens_per_s")):
+            errors.append(f"{where}.{name}.tokens_per_s: want finite > 0, "
+                          f"got {leg.get('tokens_per_s')!r}")
+        for key in ("scatter_bytes", "cached_bytes"):
+            v = leg.get(key)
+            if not (isinstance(v, int) and v >= 0):
+                errors.append(f"{where}.{name}.{key}: want int >= 0, "
+                              f"got {v!r}")
+    if any(e.startswith(where) for e in errors):
+        return
+    if cold["scatter_bytes"] < 1:
+        errors.append(
+            f"{where}.cold.scatter_bytes: want >= 1 (the cold leg must "
+            f"actually re-scatter weights), got {cold['scatter_bytes']!r}")
+        return
+    gate = DECODE_SCATTER_FRAC * cold["scatter_bytes"]
+    if warm["scatter_bytes"] > gate:
+        errors.append(
+            f"{where}.warm.scatter_bytes: {warm['scatter_bytes']} > "
+            f"{gate:.0f} gate ({DECODE_SCATTER_FRAC:.0%} of the cold leg's "
+            f"{cold['scatter_bytes']}) — pinned weights must cross the "
+            "boundary once, not per token")
+    if warm["cached_bytes"] < 1:
+        errors.append(
+            f"{where}.warm.cached_bytes: want >= 1 (warm steps must serve "
+            f"weights from the banks), got {warm['cached_bytes']!r}")
+    if warm["tokens_per_s"] < cold["tokens_per_s"] * (1.0 - _TIE_EPS):
+        errors.append(
+            f"{where}: warm tokens/sec {warm['tokens_per_s']:.2f} < cold "
+            f"{cold['tokens_per_s']:.2f} — weight residency must not make "
+            "decode slower")
+
+
 def validate(doc) -> list[str]:
     """Structural schema check; returns a list of errors (empty = valid)."""
     errors: list[str] = []
@@ -307,7 +368,7 @@ def validate(doc) -> list[str]:
     if doc.get("schema") != SCHEMA:
         errors.append(f"schema: want {SCHEMA!r}, got {doc.get('schema')!r}")
     for key in ("env", "settings", "model", "workloads", "scaling",
-                "observability", "residency", "serving"):
+                "observability", "residency", "serving", "decode"):
         if not isinstance(doc.get(key), dict):
             errors.append(f"missing or non-object top-level key {key!r}")
     if errors:
@@ -315,6 +376,7 @@ def validate(doc) -> list[str]:
     _check_observability(doc["observability"], errors)
     _check_residency(doc["residency"], errors)
     _check_serving(doc["serving"], errors)
+    _check_decode(doc["decode"], errors)
 
     env = doc["env"]
     for key in ("python", "jax", "platform"):
@@ -456,6 +518,18 @@ def compare(base: dict, cur: dict, threshold: float = DEFAULT_THRESHOLD,
         elif notes is not None:
             notes.append("current artifact did not sustain the fairness "
                          "ratio (different environment: not gated)")
+
+    # the decode tier's headline number gates like any other throughput
+    # ratio: environment-scoped, threshold-tolerant
+    bdec, cdec = base.get("decode", {}), cur.get("decode", {})
+    if bdec.get("workload") is not None:
+        if cdec.get("workload") is None:
+            errors.append("decode: present in baseline, missing in current")
+        else:
+            for leg in ("cold", "warm"):
+                ratio_gate("decode", f"{leg}.tokens_per_s",
+                           bdec[leg]["tokens_per_s"],
+                           cdec[leg]["tokens_per_s"])
 
     for name, bw in base["workloads"].items():
         cw = cur["workloads"].get(name)
