@@ -8,6 +8,11 @@ single-pod mesh.
 ``--cell arch:shape [--opt flags]`` re-runs one cell through a dry-run
 subprocess with optimization flags for the §Perf hillclimb, and prints the
 before/after delta of the dominant term.
+
+``--pim BENCH.json`` instead renders the analytical per-workload PIM
+roofline that ``tools/bench.py`` embeds in the artifact's ``cost_model``
+object: operational intensity from the traced op counts, compute/transfer
+roofs from the fitted cost-model constants (DESIGN.md §15).
 """
 from __future__ import annotations
 
@@ -66,6 +71,21 @@ def rows(recs):
     return out
 
 
+def pim_table(rows: list[dict]) -> str:
+    """Render ``cost_model["roofline"]`` rows (table ``pim_roofline``)."""
+    hdr = (f"{'workload':10s} {'op/byte':>9s} {'bound':10s} "
+           f"{'comp_roof':>12s} {'xfer_roof':>12s} {'attainable':>12s} "
+           f"{'predicted':>12s}   (Mop/s)")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['workload']:10s} {r['intensity_op_per_byte']:9.4f} "
+            f"{r['bound']:10s} {r['compute_roof_mops']:12.1f} "
+            f"{r['transfer_roof_mops']:12.1f} {r['attainable_mops']:12.1f} "
+            f"{r['predicted_mops']:12.1f}")
+    return "\n".join(lines)
+
+
 def run_cell_subprocess(arch: str, shape: str, opt: str = "",
                         mesh: str = "single") -> dict:
     repo = os.path.join(HERE, "..")
@@ -96,7 +116,19 @@ def main(argv=None):
     ap.add_argument("--mesh", default="16x16")
     ap.add_argument("--cell", default=None, help="arch:shape to re-run")
     ap.add_argument("--opt", default="", help="comma-joined opt flags")
+    ap.add_argument("--pim", default=None, metavar="BENCH.json",
+                    help="render the analytical PIM roofline from a bench "
+                         "artifact's cost_model object")
     args = ap.parse_args(argv)
+
+    if args.pim:
+        doc = json.load(open(args.pim))
+        rows_ = doc.get("cost_model", {}).get("roofline", [])
+        if not rows_:
+            print("no cost_model.roofline rows in artifact", file=sys.stderr)
+            return
+        print(pim_table(rows_))
+        return
 
     if args.cell:
         arch, shape = args.cell.split(":")

@@ -72,7 +72,7 @@ def throughput(workloads=None, n_requests: int = 6, n_chunks: int = 4,
     BankGrid (and its compiled phase cache) instead of allocating one
     through a fresh ``pim.session()``."""
     from repro import pim
-    from repro.runtime.autotune import probe_candidates
+    from repro.runtime.autotune import prefilter_candidates
 
     registry = pim.registry()
     own = pim.PimSession(grid=grid)       # grid=None -> allocate one
@@ -126,7 +126,9 @@ def throughput(workloads=None, n_requests: int = 6, n_chunks: int = 4,
         if tuning is not None and e.name in tuning.plans:
             plan = tuning.plans[e.name]
             measured = {}
-            for c in probe_candidates(plan, default=n_chunks):
+            # with cost-model predictions on the plan this prunes the probe
+            # sweep (DESIGN.md §15); without them it is probe_candidates
+            for c in prefilter_candidates(plan, default=n_chunks):
                 cand = dataclasses.replace(plan, n_chunks=c)
                 outs, dt, _ = _sched_run(grid, e, args_list, n_chunks=c,
                                          plan=cand,

@@ -208,6 +208,39 @@ def push_pull_sweep(grid: BankGrid, nbytes=(1 << 18, 1 << 20, 1 << 22),
     return rows
 
 
+def op_throughput_sweep(grid: BankGrid, ops=("add", "sub", "mul", "div"),
+                        dtypes=("int32", "float"),
+                        nbytes=(1 << 16, 1 << 20),
+                        reps: int = 5) -> list[dict]:
+    """Per-(op, dtype) grid-level issue+execute cost points — §3.1 made
+    fit-ready for the cost model (DESIGN.md §15).  One jitted bank-local
+    elementwise kernel per pair, timed at each payload size; two sizes
+    make the affine fit t(n) = issue_s + n * per_op_s exact.  Rows feed
+    :meth:`repro.core.costmodel.CostModel.fit`."""
+    np_dt = {"int32": np.int32, "int64": np.int64,
+             "float": np.float32, "double": np.float64}
+    rows = []
+    for dtype in dtypes:
+        s = _DTYPES[dtype](3)
+        item = np.dtype(np_dt[dtype]).itemsize
+        for op in ops:
+            fn = _OPS[op]
+            local = jax.jit(grid.bank_local(
+                lambda x, _fn=fn, _s=s: _fn(x, _s), in_specs=None))
+            for size in nbytes:
+                per_bank = max(size // item // grid.n_banks, 1)
+                buf = grid.to_banks(np.ones((grid.n_banks, per_bank),
+                                            np_dt[dtype]))
+                sec = _time(local, buf, reps=reps)
+                elements = per_bank * grid.n_banks
+                rows.append({"op": op, "dtype": dtype,
+                             "elements": elements,
+                             "nbytes": elements * item,
+                             "seconds": sec,
+                             "mops": elements / sec / 1e6})
+    return rows
+
+
 def bank_compute_sweep(grid: BankGrid, nbytes=(1 << 18, 1 << 20, 1 << 22),
                        reps: int = 5) -> list[dict]:
     """Bank-local streaming-compute latency vs payload size (one jitted

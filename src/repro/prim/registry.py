@@ -98,6 +98,16 @@ class WorkloadEntry:
         from repro.core.transfer import tree_nbytes
         return tree_nbytes(args)
 
+    def cost_profile(self, grid, args):
+        """Op-count table + payload bytes for the cost model (DESIGN.md
+        §15): pipelineable workloads count ops on the traced jaxpr of the
+        chunked ``compute`` phase — the same callable the pipeline jits,
+        so the profile cannot drift from the kernel; NW/BFS decompose
+        through untraceable host loops and return an ``untraced`` profile
+        with an empty op table."""
+        from repro.core.costmodel import profile_entry
+        return profile_entry(grid, self, args)
+
 
 # -- canonical argument generators -------------------------------------------
 # Sizes at scale=1 are test-sized (seconds on a CPU host); benchmarks pass
@@ -248,8 +258,8 @@ assert set(PIPELINEABLE) == set(CHUNKED), (sorted(PIPELINEABLE),
 def markdown_table() -> str:
     """The README workload table (regenerate: python -m repro.prim.registry)."""
     lines = ["| workload | paper | module | variants | chunked pipeline "
-             "| resident operand |",
-             "|---|---|---|---|---|---|"]
+             "| resident operand | cost profile |",
+             "|---|---|---|---|---|---|---|"]
     for e in REGISTRY.values():
         variants = ", ".join(e.run_variants())
         chunked = "yes" if e.pipelineable else "no — serialized `pim()` only"
@@ -259,9 +269,11 @@ def markdown_table() -> str:
             resident = f"arg {', '.join(map(str, e.resident_args))} — {kind}"
         else:
             resident = "—"
+        profile = ("traced compute jaxpr" if e.pipelineable
+                   else "— (host-loop, untraced)")
         lines.append(f"| {e.name} | {e.section} | "
                      f"`prim/{e.module.__name__.split('.')[-1]}.py` | "
-                     f"{variants} | {chunked} | {resident} |")
+                     f"{variants} | {chunked} | {resident} | {profile} |")
     return "\n".join(lines)
 
 

@@ -88,6 +88,12 @@ FILL_OVERHEAD_TARGET = 0.10
 _EPS_S = 1e-9          # floor for measured stage seconds (clock granularity)
 _MIN_BW = 1.0          # bytes/s floor so a degenerate fit never divides by 0
 
+#: Probe-free pre-filter head-room (DESIGN.md §15): a probe candidate is
+#: dropped when the instruction-level cost model predicts it more than this
+#: fraction slower than the model's best candidate.  The untuned default
+#: always survives — the tuned>=fixed invariant needs it measured.
+PREFILTER_SLACK = 0.25
+
 
 # -- fitted pieces -----------------------------------------------------------
 
@@ -209,6 +215,15 @@ class TunedPlan:
     warm_predicted_overlap: float = 0.0
     warm_candidate_s: Mapping[int, float] = dataclasses.field(
         default_factory=dict)
+    #: instruction-level cost-model predictions (DESIGN.md §15), stamped by
+    #: ``autotune(cost_model=...)``: per-candidate makespan seconds (the
+    #: pre-filter input) and per-stage seconds at the adopted chunk count
+    #: (telemetry stamps these onto every request record for
+    #: predicted-vs-measured validation).  Empty when no model was supplied.
+    model_candidate_s: Mapping[int, float] = dataclasses.field(
+        default_factory=dict)
+    predicted_stage_s: Mapping[str, float] = dataclasses.field(
+        default_factory=dict)
 
     def as_dict(self) -> dict:
         return {"workload": self.workload, "n_chunks": self.n_chunks,
@@ -225,7 +240,11 @@ class TunedPlan:
                 "warm_predicted_pipelined_s": self.warm_predicted_pipelined_s,
                 "warm_predicted_overlap": self.warm_predicted_overlap,
                 "warm_candidate_s": {str(k): v for k, v
-                                     in self.warm_candidate_s.items()}}
+                                     in self.warm_candidate_s.items()},
+                "model_candidate_s": {str(k): v for k, v
+                                      in self.model_candidate_s.items()},
+                "predicted_stage_s": {k: v for k, v
+                                      in self.predicted_stage_s.items()}}
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "TunedPlan":
@@ -245,7 +264,11 @@ class TunedPlan:
                    float(d.get("warm_predicted_pipelined_s", 0.0)),
                    float(d.get("warm_predicted_overlap", 0.0)),
                    {int(k): float(v)
-                    for k, v in d.get("warm_candidate_s", {}).items()})
+                    for k, v in d.get("warm_candidate_s", {}).items()},
+                   {int(k): float(v)
+                    for k, v in d.get("model_candidate_s", {}).items()},
+                   {str(k): float(v)
+                    for k, v in d.get("predicted_stage_s", {}).items()})
 
 
 @dataclasses.dataclass
@@ -408,6 +431,28 @@ def probe_candidates(plan: TunedPlan, k: int = 2,
     return sorted(set(out))
 
 
+def prefilter_candidates(plan: TunedPlan, k: int = 2,
+                         default: int = DEFAULT_N_CHUNKS,
+                         slack: float = PREFILTER_SLACK) -> list[int]:
+    """Probe-free pre-filter (DESIGN.md §15): start from
+    ``probe_candidates`` and drop every candidate whose cost-model
+    predicted makespan (``plan.model_candidate_s``, stamped by
+    ``autotune(cost_model=...)``) exceeds the model's best candidate by
+    more than ``slack``.  The untuned default survives unconditionally —
+    the tuned>=fixed invariant still holds by construction and the
+    measured best among the survivors still wins.  With no model
+    predictions on the plan this degenerates to ``probe_candidates``."""
+    cand = probe_candidates(plan, k=k, default=default)
+    model_s = plan.model_candidate_s
+    scored = {c: model_s[c] for c in cand if c in model_s}
+    if not scored:
+        return cand
+    best = min(scored.values())
+    keep = [c for c in cand
+            if c == default or model_s.get(c, best) <= best * (1.0 + slack)]
+    return sorted(set(keep))
+
+
 def rank_candidates(n_ranks: int) -> list[int]:
     """Rank counts worth measuring on an ``n_ranks``-rank grid: every
     divisor (1 stays in — the flat pipeline is the baseline the rank
@@ -484,10 +529,20 @@ def autotune(grid: BankGrid, entries: Sequence["WorkloadEntry"] | None = None,
              *, scale: int = 1, rng=None, reps: int = 3,
              candidates: Sequence[int] = CHUNK_CANDIDATES,
              calib_nbytes=(1 << 18, 1 << 20, 1 << 22),
-             probe: bool = False) -> TuningResult:
+             probe: bool = False, cost_model=None) -> TuningResult:
     """Calibrate the backend, profile each pipelineable workload, and solve
     for its chunk count and batch size.  ``probe=True`` additionally
-    measures the top candidates and adopts the measured best."""
+    measures the top candidates and adopts the measured best.
+
+    ``cost_model`` (a :class:`repro.core.costmodel.CostModel`) turns on the
+    probe-free pre-filter (DESIGN.md §15): every plan is stamped with the
+    model's per-candidate makespan predictions (``model_candidate_s``) and
+    the probe set shrinks to ``prefilter_candidates`` — fewer measured
+    probes, the untuned default still measured, measured best still wins.
+    The adopted plan also carries ``predicted_stage_s``, the model's
+    per-stage seconds at the adopted chunk count, which the pipeline
+    stamps onto every request record for predicted-vs-measured
+    validation."""
     if entries is None:
         from repro.prim.registry import REGISTRY
         entries = [e for e in REGISTRY.values() if e.pipelineable]
@@ -509,8 +564,17 @@ def autotune(grid: BankGrid, entries: Sequence["WorkloadEntry"] | None = None,
         # varying chunks; their warm win is the skipped split broadcast)
         plan = plan_for(prof, candidates,
                         warm=w.supports_residency and not w.meta_resident)
+        cprof = None
+        if cost_model is not None:
+            cprof = entry.cost_profile(grid, args)
+            model_s = cost_model.candidate_predictions(
+                cprof, sorted(set(candidates) | {1}))
+            plan = dataclasses.replace(plan, model_candidate_s=model_s)
         if probe:
-            plan = probe_plan(grid, entry, plan, [args])
+            probe_cand = (prefilter_candidates(plan)
+                          if cost_model is not None else None)
+            plan = probe_plan(grid, entry, plan, [args],
+                              candidates=probe_cand)
             if n_ranks > 1:
                 # the rank dimension (DESIGN.md §10) is settled by
                 # measurement — divisor sets are tiny and the flat
@@ -518,6 +582,12 @@ def autotune(grid: BankGrid, entries: Sequence["WorkloadEntry"] | None = None,
                 # Without probing, plans stay rank-agnostic and execution
                 # defers to the grid's rank count (_resolve_ranks).
                 plan = probe_ranks(grid, entry, plan, [args])
+        if cprof is not None:
+            # per-stage predictions at the *adopted* chunk count (the probe
+            # may have moved it) — telemetry stamps these on every record
+            pred = cost_model.predict(cprof, n_chunks=plan.n_chunks)
+            plan = dataclasses.replace(
+                plan, predicted_stage_s=dict(pred.stage_s))
         profiles[entry.name] = prof
         plans[entry.name] = plan
     return TuningResult(stages=stages, profiles=profiles, plans=plans,

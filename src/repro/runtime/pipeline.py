@@ -172,9 +172,12 @@ def run_pipelined_many(grid: BankGrid, workload: ChunkedWorkload,
     """
     n_chunks, use_cache = _effective_chunks(workload, n_chunks, plan, cache)
     if plan is not None and records is not None:
+        stage_pred = dict(getattr(plan, "predicted_stage_s", {}) or {})
         for rec in records:
             rec.tuned = True
             rec.predicted_overlap = plan.predicted_overlap
+            if stage_pred:
+                rec.predicted_stage_s = dict(stage_pred)
     n_req = len(requests)
     metas: list = [None] * n_req
     entries: list = [None] * n_req        # ResidentEntry per request
@@ -452,9 +455,12 @@ def run_pipelined_ranked(grid, workload: ChunkedWorkload,
                                   n_chunks=n_chunks, plan=plan,
                                   records=records, cache=cache, _full=_full)
     if records is not None and plan is not None:
+        stage_pred = dict(getattr(plan, "predicted_stage_s", {}) or {})
         for rec in records:
             rec.tuned = True
             rec.predicted_overlap = plan.predicted_overlap
+            if stage_pred:
+                rec.predicted_stage_s = dict(stage_pred)
 
     rep = grid.rank_view(0)          # all views share the per-rank geometry
     n_req = len(requests)

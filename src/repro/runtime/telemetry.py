@@ -88,6 +88,11 @@ class RequestRecord:
     phases: "PhaseTimes" = dataclasses.field(default_factory=_phases)
     serialized_s: float = 0.0   # optional: measured pim() baseline time
     predicted_overlap: float = 0.0   # autotune plan's promise (0 = untuned)
+    #: cost-model per-stage seconds (cpu_dpu/dpu/dpu_cpu) stamped from the
+    #: plan's ``predicted_stage_s`` (DESIGN.md §15) — compared against
+    #: ``phases`` so every bench artifact doubles as a model validation
+    #: set; {} when the plan carries no model predictions
+    predicted_stage_s: dict = dataclasses.field(default_factory=dict)
     tuned: bool = False              # served under a TunedPlan?
     cache_hit: bool = False          # resident operand served warm? (§12)
     #: caller labels from RequestOptions.tags (e.g. the decode engine's
@@ -147,6 +152,8 @@ class RequestRecord:
                 "predicted_overlap": self.predicted_overlap,
                 "overlap_misprediction": self.overlap_misprediction,
                 "achieved_gbps": self.achieved_gbps,
+                **{f"predicted_{k}_s": v
+                   for k, v in self.predicted_stage_s.items()},
                 **{f"tag_{k}": v for k, v in self.tags.items()}}
 
 

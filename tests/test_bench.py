@@ -2,8 +2,9 @@
 that survives a JSON round trip, tools/check_bench.py validates schemas,
 the monotone weak-scaling invariant, the tracing-overhead gate, the
 residency (warm-vs-cold) gate, the serving (fairness + shed) gate, the
-decode (parity + warm-scatter + tokens/sec) gate, and regressions, and the
-committed BENCH_PR9.json baseline is valid."""
+decode (parity + warm-scatter + tokens/sec) gate, the cost-model accuracy
+(predicted-vs-measured geomean) gate, and regressions, and the committed
+BENCH_PR10.json baseline is valid."""
 import json
 import pathlib
 import sys
@@ -206,6 +207,72 @@ def test_compare_gates_decode_tokens_per_s(doc):
                for e in check_bench.compare(doc, cur))
 
 
+def test_collect_cost_model_section(doc):
+    cm = doc["cost_model"]
+    assert cm["gate"] == check_bench.COST_MODEL_GATE
+    const = cm["constants"]
+    assert const["push"]["bytes_per_s"] > 0
+    assert const["pull"]["bytes_per_s"] > 0
+    assert const["ops"]                     # non-empty (op, dtype) table
+    rows = {r["workload"]: r for r in cm["rows"]}
+    assert "VA" in rows and "GEMV" in rows
+    assert "NW" not in rows                 # untuned/serialized: no claim
+    for r in rows.values():
+        assert r["accuracy_ratio"] >= 1.0
+        assert r["predicted"]["total_s"] > 0
+        assert r["measured"]["total_s"] > 0
+        assert r["profile"]["op_counts"]    # traced op table rides along
+    assert cm["geomean_ratio"] > 0
+    assert {x["workload"] for x in cm["roofline"]} >= {"VA", "GEMV"}
+
+
+def test_validate_gates_cost_model(doc):
+    bad = json.loads(json.dumps(doc))
+    bad["cost_model"]["rows"][0]["accuracy_ratio"] = 0.2   # < 1: impossible
+    assert any("accuracy_ratio" in e for e in check_bench.validate(bad))
+    bad = json.loads(json.dumps(doc))
+    blown = check_bench.COST_MODEL_GATE * 3
+    for r in bad["cost_model"]["rows"]:
+        r["accuracy_ratio"] = blown
+    bad["cost_model"]["geomean_ratio"] = blown
+    assert any("gate" in e for e in check_bench.validate(bad))
+    bad = json.loads(json.dumps(doc))
+    bad["cost_model"]["geomean_ratio"] *= 2.0   # headline != its own rows
+    assert any("derivable" in e for e in check_bench.validate(bad))
+    bad = json.loads(json.dumps(doc))
+    bad["cost_model"]["constants"]["push"]["bytes_per_s"] = 0.0
+    assert any("constants.push" in e for e in check_bench.validate(bad))
+    empty = json.loads(json.dumps(doc))
+    empty["cost_model"]["rows"] = []            # nothing tuned: still valid
+    assert check_bench.validate(empty) == []
+    missing = json.loads(json.dumps(doc))
+    del missing["cost_model"]
+    assert any("cost_model" in e for e in check_bench.validate(missing))
+
+
+def _pin_cost_model(d, ratio):
+    for r in d["cost_model"]["rows"]:
+        r["accuracy_ratio"] = ratio
+    d["cost_model"]["geomean_ratio"] = ratio
+
+
+def test_compare_gates_cost_model_accuracy(doc):
+    base = json.loads(json.dumps(doc))
+    _pin_cost_model(base, 2.0)
+    cur = json.loads(json.dumps(doc))
+    _pin_cost_model(cur, 3.0)                   # > 25% worse: regression
+    assert any("geomean accuracy ratio regressed" in e
+               for e in check_bench.compare(base, cur))
+    ok = json.loads(json.dumps(doc))
+    _pin_cost_model(ok, 2.2)                    # within threshold: fine
+    assert check_bench.compare(base, ok) == []
+    gone = json.loads(json.dumps(doc))
+    gone["cost_model"]["rows"] = []
+    gone["cost_model"]["geomean_ratio"] = 1.0
+    assert any("current has none" in e
+               for e in check_bench.compare(base, gone))
+
+
 def test_compare_flags_fairness_gated_loss_same_env_only(doc):
     base = json.loads(json.dumps(doc))
     base["serving"]["fairness_gated"] = True
@@ -388,8 +455,8 @@ def test_check_bench_cli(doc, tmp_path):
 # -- the committed baseline CI gates against ----------------------------------
 
 def test_committed_baseline_is_valid():
-    path = ROOT / "BENCH_PR9.json"
-    assert path.exists(), "BENCH_PR9.json baseline missing from repo root"
+    path = ROOT / "BENCH_PR10.json"
+    assert path.exists(), "BENCH_PR10.json baseline missing from repo root"
     base = json.loads(path.read_text())
     assert check_bench.validate(base) == []
     # generated at the CI bench-smoke shape: 8 simulated banks, full registry

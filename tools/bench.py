@@ -43,13 +43,21 @@ the multi-tenant tier: a saturating two-tenant 2:1 fairness leg (measured
 goodput ratio vs the weight ratio, gated via ``fairness_gated``) and an
 overloaded open-loop shed leg (exact outcome accounting, sane shed rate).
 
+A ``cost_model`` object (DESIGN.md §15) embeds the instruction-level cost
+model: the fitted per-(op, dtype) issue+execute constants and push/pull
+transfer constants, one predicted-vs-measured stage-seconds row per tuned
+workload (cold path, best-of-reps), the geomean accuracy ratio gated by
+``check_bench.py`` (``COST_MODEL_GATE``), and the per-workload analytical
+roofline rows — every artifact doubles as a model validation set, rendered
+by ``tools/whatif.py table``.
+
 A ``decode`` object (DESIGN.md §14) measures the LLM decode serving tier:
 cold (every step re-scatters every weight) vs warm (weights pinned once at
 setup) tokens/sec on a tiny float32 decoder, both legs token-checked
 against the pure-JAX ``greedy_generate`` — ``check_bench.py`` gates warm
 weight-scatter bytes ~ 0 and warm tokens/sec >= cold.
 
-    PYTHONPATH=src python tools/bench.py --smoke --banks 8 --out BENCH_PR9.json
+    PYTHONPATH=src python tools/bench.py --smoke --banks 8 --out BENCH_PR10.json
     PYTHONPATH=src python tools/bench.py roofline            # 4th subcommand
 """
 from __future__ import annotations
@@ -320,6 +328,84 @@ def _residency_section(grid, names, smoke: bool) -> dict:
     }
 
 
+def _cost_model_section(grid, tuning, cm, names, smoke: bool) -> dict:
+    """The artifact's ``cost_model`` object (DESIGN.md §15): the fitted
+    constants plus one predicted-vs-measured row per tuned workload.  Each
+    row runs the workload through a ``resident=False`` session (the model
+    prices the cold path — every chunk scatters) at the plan's chunk count,
+    best-of-reps, and compares the telemetry stage buckets against the
+    model's per-stage predictions.  The headline is the geomean of the
+    per-workload accuracy ratios max(pred/meas, meas/pred) on total stage
+    seconds — scale-free, >= 1, and gated generously by ``check_bench.py``
+    (``COST_MODEL_GATE``) in the same non-flaky spirit as the µs/span
+    probe.  The per-workload analytical roofline rows ride along."""
+    import time
+
+    import numpy as np
+
+    from check_bench import COST_MODEL_GATE
+    from repro import pim
+    from repro.core.costmodel import geomean_ratio, roofline_rows
+
+    registry = pim.registry()
+    rng = np.random.default_rng(11)
+    todo = [n for n in names if n in tuning.plans]
+    out = {"gate": COST_MODEL_GATE, "constants": cm.as_dict(),
+           "rows": [], "geomean_ratio": 1.0, "roofline": []}
+    if not todo:
+        return out                       # nothing tuned; validator skips
+    # resident=False: no operand cache, so the cold path the model prices
+    # (every chunk scatters, plan.n_chunks effective) is what runs
+    sess = pim.PimSession(grid=grid, trace=False, resident=False)
+    sess.plans.update(tuning.plans)
+    reps = 2 if smoke else 3
+    rows, profiles = [], []
+    for name in todo:
+        entry = registry[name]
+        args = entry.make_args(rng, 1 if smoke else 2)
+        prof = entry.cost_profile(grid, args)
+        profiles.append(prof)
+        plan = tuning.plans[name]
+        pred = cm.predict_plan(prof, plan)
+        sess.run(name, *args)            # compile warmup at this chunk shape
+        best_s, best_rec = float("inf"), None
+        for _ in range(reps):
+            sess.telemetry.reset()
+            t0 = time.perf_counter()
+            sess.run(name, *args)
+            dt = time.perf_counter() - t0
+            rec = sess.telemetry.snapshot_records()[-1]
+            if dt < best_s:
+                best_s, best_rec = dt, rec
+        meas_total = (best_rec.phases.cpu_dpu + best_rec.phases.dpu
+                      + best_rec.phases.dpu_cpu)
+        pred_total = sum(pred.stage_s.values())
+        ratio = max(pred_total / max(meas_total, 1e-9),
+                    meas_total / max(pred_total, 1e-9))
+        rows.append({
+            "workload": name,
+            "n_chunks": plan.n_chunks,
+            "predicted": {"cpu_dpu_s": pred.stage_s["cpu_dpu"],
+                          "dpu_s": pred.stage_s["dpu"],
+                          "dpu_cpu_s": pred.stage_s["dpu_cpu"],
+                          "total_s": pred_total,
+                          "makespan_s": pred.makespan_s,
+                          "energy_j": pred.energy_j},
+            "measured": {"cpu_dpu_s": best_rec.phases.cpu_dpu,
+                         "dpu_s": best_rec.phases.dpu,
+                         "dpu_cpu_s": best_rec.phases.dpu_cpu,
+                         "total_s": meas_total,
+                         "service_s": best_rec.service_s},
+            "accuracy_ratio": ratio,
+            "profile": prof.as_dict(),
+        })
+    sess.close()
+    out["rows"] = rows
+    out["geomean_ratio"] = geomean_ratio(r["accuracy_ratio"] for r in rows)
+    out["roofline"] = roofline_rows(cm, profiles)
+    return out
+
+
 def _serving_section(grid, smoke: bool) -> dict:
     """The artifact's ``serving`` object (DESIGN.md §13): delegated to the
     load harness — a saturating two-tenant fairness leg plus an overloaded
@@ -432,9 +518,15 @@ def collect(grid=None, workloads=None, *, n_requests: int = 6,
     names = list(workloads or registry)
     entries = [registry[n] for n in names]
 
+    # the instruction-level cost model (DESIGN.md §15) is calibrated once
+    # and threaded through autotune so every plan carries model predictions
+    # (model_candidate_s prunes the tuned probe sweep; predicted_stage_s is
+    # stamped onto every request record)
+    from repro.core.costmodel import CostModel
+    cm = CostModel.calibrate(session.grid, reps=2 if smoke else 3)
     tuning = session.autotune([e for e in entries if e.pipelineable],
                               scale=scale, reps=2 if smoke else 3,
-                              probe=False)
+                              probe=False, cost_model=cm)
     rows = throughput(workloads=names, n_requests=n_requests, scale=scale,
                       n_chunks=DEFAULT_N_CHUNKS, tuning=tuning,
                       grid=session.grid)
@@ -457,6 +549,8 @@ def collect(grid=None, workloads=None, *, n_requests: int = 6,
         "residency": _residency_section(session.grid, names, smoke),
         "serving": _serving_section(session.grid, smoke),
         "decode": _decode_section(session.grid, smoke),
+        "cost_model": _cost_model_section(session.grid, tuning, cm, names,
+                                          smoke),
         # the fourth benchmark: rows ride along when dry-run records exist
         # ([] otherwise — the LM roofline needs repro.launch.dryrun output)
         "roofline": rl.rows(rl.load_records()),
@@ -479,7 +573,7 @@ def main(argv=None) -> int:
                     help="CI-sized run: small scale, few requests, "
                          "characterization slice only")
     ap.add_argument("--out", default="BENCH.json",
-                    help="artifact path (e.g. BENCH_PR9.json)")
+                    help="artifact path (e.g. BENCH_PR10.json)")
     ap.add_argument("--pr-tag", default=None,
                     help="free-form tag recorded in settings.pr_tag")
     ap.add_argument("--requests", type=int, default=None)

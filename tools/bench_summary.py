@@ -187,6 +187,52 @@ def decode_table(dec: dict) -> list[str]:
     return lines
 
 
+def cost_model_table(cm: dict) -> list[str]:
+    """Predicted-vs-measured cost-model accuracy (schema repro-bench/7)."""
+    if not cm or not cm.get("rows"):
+        return []
+    gate = cm.get("gate", 0.0)
+    lines = [
+        "",
+        "#### Cost model: predicted vs measured stage seconds",
+        "",
+        f"geomean accuracy ratio {cm.get('geomean_ratio', 0.0):.2f} "
+        f"(gated ≤ {gate:.1f}) · DESIGN.md §15",
+        "",
+        "| workload | chunks | pred CPU→DPU ms | pred DPU ms "
+        "| pred DPU→CPU ms | pred total ms | meas total ms | ×ratio "
+        "| energy J |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in cm["rows"]:
+        p, m = r["predicted"], r["measured"]
+        lines.append(
+            f"| {r['workload']} | {r.get('n_chunks', '—')} "
+            f"| {_fmt(p['cpu_dpu_s'] * 1e3, 3)} "
+            f"| {_fmt(p['dpu_s'] * 1e3, 3)} "
+            f"| {_fmt(p['dpu_cpu_s'] * 1e3, 3)} "
+            f"| {_fmt(p['total_s'] * 1e3, 3)} "
+            f"| {_fmt(m['total_s'] * 1e3, 3)} "
+            f"| {_fmt(r['accuracy_ratio'], 2)} "
+            f"| {_fmt(p.get('energy_j', 0.0), 4)} |"
+        )
+    roof = cm.get("roofline", [])
+    if roof:
+        lines += [
+            "",
+            "| workload | op/byte | roofline bound | attainable Mop/s "
+            "| predicted Mop/s |",
+            "|---|---|---|---|---|",
+        ]
+        for r in roof:
+            lines.append(
+                f"| {r['workload']} | {_fmt(r['intensity_op_per_byte'], 3)} "
+                f"| {r['bound']} | {_fmt(r['attainable_mops'], 1)} "
+                f"| {_fmt(r['predicted_mops'], 1)} |"
+            )
+    return lines
+
+
 def summarize(doc: dict) -> str:
     env, settings = doc["env"], doc["settings"]
     kind = "smoke" if settings.get("smoke") else "full"
@@ -212,6 +258,7 @@ def summarize(doc: dict) -> str:
         *residency_table(doc.get("residency", {})),
         *serving_table(doc.get("serving", {})),
         *decode_table(doc.get("decode", {})),
+        *cost_model_table(doc.get("cost_model", {})),
     ]
     return "\n".join(lines) + "\n"
 

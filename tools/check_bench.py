@@ -52,8 +52,17 @@ reference (``parity``), the warm leg's weight-scatter bytes must be <=
 :data:`DECODE_SCATTER_FRAC` of the cold leg's (pinned weights cross the
 boundary once, not per token), and warm tokens/sec must be >= cold (weight
 residency must pay, not cost).
+Schema repro-bench/7 adds the ``cost_model`` object (DESIGN.md §15,
+``repro.core.costmodel``): the fitted instruction-level model constants
+plus one predicted-vs-measured stage-seconds row per tuned workload.  The
+gate is deliberately generous and scale-free (same non-flaky spirit as the
+µs/span probe): the geomean of the per-workload accuracy ratios
+max(pred/meas, meas/pred) must stay under :data:`COST_MODEL_GATE`, and the
+recorded geomean must match its own rows — an analytical model that drifts
+order-of-magnitude from the machine it claims to predict fails the
+artifact.
 
-    python tools/check_bench.py BENCH_PR9.json BENCH_ci.json [--threshold 0.25]
+    python tools/check_bench.py BENCH_PR10.json BENCH_ci.json [--threshold 0.25]
 """
 from __future__ import annotations
 
@@ -63,7 +72,7 @@ import math
 import pathlib
 import sys
 
-SCHEMA = "repro-bench/6"
+SCHEMA = "repro-bench/7"
 
 #: relative drop in overlap speedup (or rise in time, with --strict-timing)
 #: tolerated before the gate fails
@@ -101,6 +110,14 @@ DECODE_SCATTER_FRAC = 0.01
 #: configured weight ratio, as a fraction of the expected ratio (the
 #: serving tier's weighted-fairness promise, DESIGN.md §13)
 FAIRNESS_TOLERANCE = 0.25
+
+#: max geomean predicted-vs-measured accuracy ratio for the cost model
+#: (DESIGN.md §15).  Generous by design: the model predicts from fitted
+#: microbenchmark constants while the measurement includes scheduler and
+#: host noise — the gate catches an order-of-magnitude drift (wrong op
+#: table, broken fit), not percent-level misprediction, so it stays
+#: non-flaky on shared CI hosts
+COST_MODEL_GATE = 8.0
 
 _TIE_EPS = 1e-9
 
@@ -360,6 +377,74 @@ def _check_decode(dec, errors: list[str]) -> None:
             "decode slower")
 
 
+def _check_cost_model(cm, errors: list[str]) -> None:
+    """The ``cost_model`` object (DESIGN.md §15): sane fitted constants,
+    well-formed predicted-vs-measured rows, a geomean that matches its own
+    rows, and the geomean under :data:`COST_MODEL_GATE`."""
+    where = "cost_model"
+    rows = cm.get("rows")
+    if not isinstance(rows, list):
+        errors.append(f"{where}.rows: want a list of rows, got {rows!r}")
+        return
+    const = cm.get("constants")
+    if not isinstance(const, dict):
+        errors.append(f"{where}.constants: must be an object")
+        return
+    for leg in ("push", "pull"):
+        t = const.get(leg)
+        ok = (isinstance(t, dict) and _finite_pos(t.get("bytes_per_s"))
+              and isinstance(t.get("setup_s"), (int, float))
+              and math.isfinite(t.get("setup_s", math.nan))
+              and t.get("setup_s", -1) >= 0)
+        if not ok:
+            errors.append(f"{where}.constants.{leg}: want setup_s >= 0 and "
+                          f"bytes_per_s > 0, got {t!r}")
+    ops = const.get("ops")
+    if not (isinstance(ops, dict) and ops):
+        errors.append(f"{where}.constants.ops: want a non-empty "
+                      "(op, dtype) cost table")
+    elif not all(isinstance(c, dict) and _finite_pos(c.get("per_op_s"))
+                 for c in ops.values()):
+        errors.append(f"{where}.constants.ops: every entry needs a finite "
+                      "per_op_s > 0")
+    if not rows:
+        return      # nothing was tuned — no accuracy claim to gate
+    ratios = []
+    for i, row in enumerate(rows):
+        rwhere = f"{where}.rows[{i}]"
+        if not isinstance(row, dict):
+            errors.append(f"{rwhere}: must be an object")
+            return
+        for key in ("workload", "predicted", "measured"):
+            if key not in row:
+                errors.append(f"{rwhere}: missing {key!r}")
+                return
+        r = row.get("accuracy_ratio")
+        if not (isinstance(r, (int, float)) and math.isfinite(r)
+                and r >= 1.0 - _TIE_EPS):
+            errors.append(f"{rwhere}.accuracy_ratio: want finite >= 1 "
+                          f"(max(pred/meas, meas/pred)), got {r!r}")
+            return
+        ratios.append(float(r))
+    g = cm.get("geomean_ratio")
+    if not _finite_pos(g):
+        errors.append(f"{where}.geomean_ratio: want finite > 0, got {g!r}")
+        return
+    recomputed = math.exp(sum(math.log(r) for r in ratios) / len(ratios))
+    if abs(g - recomputed) > 1e-6 * max(recomputed, 1.0):
+        errors.append(
+            f"{where}.geomean_ratio: recorded {g:.4f} does not match its "
+            f"own rows (recomputed {recomputed:.4f}) — the headline must "
+            "be derivable from the per-workload rows")
+        return
+    if g > COST_MODEL_GATE:
+        errors.append(
+            f"{where}.geomean_ratio: {g:.2f} > {COST_MODEL_GATE:.1f} gate "
+            "— the model's predicted stage times drifted order-of-"
+            "magnitude from the measured ones (wrong op table or broken "
+            "calibration fit)")
+
+
 def validate(doc) -> list[str]:
     """Structural schema check; returns a list of errors (empty = valid)."""
     errors: list[str] = []
@@ -368,7 +453,8 @@ def validate(doc) -> list[str]:
     if doc.get("schema") != SCHEMA:
         errors.append(f"schema: want {SCHEMA!r}, got {doc.get('schema')!r}")
     for key in ("env", "settings", "model", "workloads", "scaling",
-                "observability", "residency", "serving", "decode"):
+                "observability", "residency", "serving", "decode",
+                "cost_model"):
         if not isinstance(doc.get(key), dict):
             errors.append(f"missing or non-object top-level key {key!r}")
     if errors:
@@ -377,6 +463,7 @@ def validate(doc) -> list[str]:
     _check_residency(doc["residency"], errors)
     _check_serving(doc["serving"], errors)
     _check_decode(doc["decode"], errors)
+    _check_cost_model(doc["cost_model"], errors)
 
     env = doc["env"]
     for key in ("python", "jax", "platform"):
@@ -530,6 +617,21 @@ def compare(base: dict, cur: dict, threshold: float = DEFAULT_THRESHOLD,
                 ratio_gate("decode", f"{leg}.tokens_per_s",
                            bdec[leg]["tokens_per_s"],
                            cdec[leg]["tokens_per_s"])
+
+    # cost-model accuracy gates like a throughput ratio: losing the rows
+    # entirely is a structural regression; a same-env geomean blow-up past
+    # the threshold means the model stopped tracking the machine
+    bcm, ccm = base.get("cost_model", {}), cur.get("cost_model", {})
+    if bcm.get("rows"):
+        if not ccm.get("rows"):
+            errors.append("cost_model: baseline has predicted-vs-measured "
+                          "rows, current has none")
+        elif gate_ratios and ccm["geomean_ratio"] \
+                > bcm["geomean_ratio"] * (1.0 + threshold):
+            errors.append(
+                "cost_model: geomean accuracy ratio regressed "
+                f"{bcm['geomean_ratio']:.2f} -> {ccm['geomean_ratio']:.2f} "
+                f"(> {threshold:.0%} worse)")
 
     for name, bw in base["workloads"].items():
         cw = cur["workloads"].get(name)

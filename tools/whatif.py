@@ -1,0 +1,197 @@
+#!/usr/bin/env python
+"""What-if analysis over the fitted instruction-level DPU cost model.
+
+Every ``BENCH_*.json`` artifact (schema repro-bench/7+) embeds a ``cost_model``
+object: the fitted per-op/per-dtype cycle costs and transfer constants from
+``repro.core.costmodel.CostModel.calibrate``, plus one predicted-vs-measured
+row per tuned workload with the workload's traced op-count profile.  That is
+enough to replay the model offline — no hardware, no JAX session — so this CLI
+answers "what if we had 2x the banks / 4x the problem / int8 operands" from
+the artifact alone (DESIGN.md §15, EXPERIMENTS.md §What-if).
+
+Subcommands:
+
+``table BENCH.json``
+    Render the predicted-vs-measured accuracy table (and the analytical PIM
+    roofline) as GitHub markdown.
+
+``validate BENCH.json [--gate X]``
+    Recompute the geomean accuracy ratio from the rows and exit non-zero if
+    it exceeds the gate (default: the gate recorded in the artifact).  The
+    ``model-validate`` CI job pipes this into ``$GITHUB_STEP_SUMMARY``.
+
+``predict BENCH.json --workload W [--banks-x N] [--ranks-x N]``
+``        [--problem-x N] [--dtype int8] [--chunks C]``
+    Rebuild the model and the workload's profile from the artifact and print
+    baseline vs what-if stage seconds, makespan, and energy.
+
+    PYTHONPATH=src python tools/whatif.py table BENCH_PR10.json
+    PYTHONPATH=src python tools/whatif.py validate BENCH_PR10.json
+    PYTHONPATH=src python tools/whatif.py predict BENCH_PR10.json \\
+        --workload GEMV --banks-x 2 --dtype int8
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+_HERE = pathlib.Path(__file__).resolve().parent
+sys.path.insert(0, str(_HERE.parent / "src"))
+sys.path.insert(0, str(_HERE))
+
+
+def _load(path: str) -> dict:
+    return json.loads(pathlib.Path(path).read_text())
+
+
+def _cost_model(doc: dict) -> dict:
+    cm = doc.get("cost_model")
+    if not isinstance(cm, dict):
+        raise SystemExit("artifact has no cost_model object (schema < repro-bench/7)")
+    return cm
+
+
+def cmd_table(args: argparse.Namespace) -> int:
+    from bench_summary import cost_model_table
+
+    lines = cost_model_table(_cost_model(_load(args.bench)))
+    if not lines:
+        print("cost model: no predicted-vs-measured rows (nothing was tuned)")
+        return 0
+    print("\n".join(lines).strip())
+    return 0
+
+
+def cmd_validate(args: argparse.Namespace) -> int:
+    from bench_summary import cost_model_table
+
+    from repro.core.costmodel import geomean_ratio
+
+    cm = _cost_model(_load(args.bench))
+    rows = cm.get("rows", [])
+    if not rows:
+        print("cost model: no predicted-vs-measured rows (nothing was tuned)")
+        return 0
+    gate = args.gate if args.gate is not None else float(cm.get("gate", 8.0))
+    g = geomean_ratio([r["accuracy_ratio"] for r in rows])
+    print("\n".join(cost_model_table(cm)).strip())
+    print()
+    verdict = "PASS" if g <= gate else "FAIL"
+    print(
+        f"**cost-model accuracy**: geomean ratio x{g:.2f} over {len(rows)} "
+        f"workloads vs gate x{gate:.1f} — {verdict}"
+    )
+    return 0 if g <= gate else 1
+
+
+def _scenario(args: argparse.Namespace) -> str:
+    bits = []
+    if args.banks_x != 1.0:
+        bits.append(f"banks x{args.banks_x:g}")
+    if args.ranks_x != 1.0:
+        bits.append(f"transfer bandwidth x{args.ranks_x:g}")
+    if args.problem_x != 1.0:
+        bits.append(f"problem x{args.problem_x:g}")
+    if args.dtype:
+        bits.append(f"dtype -> {args.dtype}")
+    return ", ".join(bits) or "unchanged"
+
+
+def cmd_predict(args: argparse.Namespace) -> int:
+    from repro.core.costmodel import CostModel, CostProfile
+
+    cm = _cost_model(_load(args.bench))
+    rows = cm.get("rows", [])
+    row = next((r for r in rows if r["workload"] == args.workload), None)
+    if row is None:
+        have = ", ".join(r["workload"] for r in rows) or "none"
+        raise SystemExit(f"workload {args.workload!r} not in cost_model rows ({have})")
+    model = CostModel.from_dict(cm["constants"])
+    prof = CostProfile.from_dict(row["profile"])
+    n_chunks = args.chunks or int(row.get("n_chunks") or 1)
+
+    base = model.predict(prof, n_chunks=n_chunks)
+    what_prof = prof.retyped(args.dtype) if args.dtype else prof
+    what = model.predict(
+        what_prof,
+        n_chunks=n_chunks,
+        banks_x=args.banks_x,
+        problem_x=args.problem_x,
+        xfer_bw_x=args.ranks_x,
+    )
+
+    print(
+        f"workload {args.workload} at {n_chunks} chunks, "
+        f"{prof.n_banks} banks baseline — what-if: {_scenario(args)}"
+    )
+    print()
+    print("| metric | baseline | what-if | x |")
+    print("|---|---|---|---|")
+    pairs = [
+        ("CPU->DPU s", base.stage_s["cpu_dpu"], what.stage_s["cpu_dpu"]),
+        ("DPU compute s", base.stage_s["dpu"], what.stage_s["dpu"]),
+        ("DPU->CPU s", base.stage_s["dpu_cpu"], what.stage_s["dpu_cpu"]),
+        ("serialized s", base.serialized_s, what.serialized_s),
+        ("makespan s", base.makespan_s, what.makespan_s),
+        ("energy J", base.energy_j, what.energy_j),
+    ]
+    for name, b, w in pairs:
+        ratio = b / w if w > 0 else float("inf")
+        print(f"| {name} | {b:.6f} | {w:.6f} | {ratio:.2f} |")
+    meas = row.get("measured", {})
+    if meas.get("total_s"):
+        print()
+        print(
+            f"measured baseline total (for grounding): {meas['total_s']:.6f} s "
+            f"at accuracy ratio x{row['accuracy_ratio']:.2f}"
+        )
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("table", help="predicted-vs-measured markdown table")
+    p.add_argument("bench")
+    p.set_defaults(fn=cmd_table)
+
+    p = sub.add_parser("validate", help="recompute + gate the geomean accuracy")
+    p.add_argument("bench")
+    p.add_argument(
+        "--gate",
+        type=float,
+        default=None,
+        help="max geomean accuracy ratio (default: the artifact's own gate)",
+    )
+    p.set_defaults(fn=cmd_validate)
+
+    p = sub.add_parser("predict", help="model-only what-if for one workload")
+    p.add_argument("bench")
+    p.add_argument("--workload", required=True)
+    p.add_argument("--banks-x", type=float, default=1.0, help="scale bank count")
+    p.add_argument(
+        "--ranks-x",
+        type=float,
+        default=1.0,
+        help="scale transfer bandwidth (more ranks -> wider parallel transfers)",
+    )
+    p.add_argument("--problem-x", type=float, default=1.0, help="scale problem size")
+    p.add_argument("--dtype", default=None, help="re-type operands (e.g. int8)")
+    p.add_argument(
+        "--chunks",
+        type=int,
+        default=None,
+        help="pipeline chunk count (default: the tuned plan's)",
+    )
+    p.set_defaults(fn=cmd_predict)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
